@@ -1,0 +1,35 @@
+"""Scale-out study (beyond-paper; §3.1 replica pools): finish rate vs
+replica count and load-balancing policy under overload."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import ModelExecutor, OrlojScheduler
+from repro.serving.cluster import simulate_cluster
+from repro.serving.trace import TraceConfig, generate_requests
+from repro.serving.workload import bimodal
+
+from .common import LM
+
+
+def cluster_scale(full: bool = False) -> None:
+    replicas = (1, 2, 4, 8) if full else (1, 2, 4)
+    policies = ("least_loaded", "round_robin", "jsq_work")
+    n = 1_500 if full else 800
+    for k in replicas:
+        # offered load ≈ 0.8 × k single-worker capacities
+        rs = generate_requests(
+            bimodal(1.0), LM, slo_scale=3.0,
+            cfg=TraceConfig(n_requests=n, seed=13, utilization=0.8 * k),
+        )
+        for policy in policies:
+            scheds = [
+                OrlojScheduler(LM, initial_dists=rs.initial_dists())
+                for _ in range(k)
+            ]
+            res = simulate_cluster(rs.fresh(), scheds, ModelExecutor(LM), policy=policy)
+            print(
+                f"cluster/{policy}/r{k},0,finish_rate={res.finish_rate:.3f};util={res.utilization:.2f}",
+                flush=True,
+            )

@@ -1,0 +1,73 @@
+"""Shared benchmark plumbing: run the four systems on a workload and emit
+``name,us_per_call,derived`` CSV rows (one benchmark per paper table/figure)."""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import (
+    BatchLatencyModel,
+    ClipperScheduler,
+    ClockworkScheduler,
+    ModelExecutor,
+    NexusScheduler,
+    OrlojScheduler,
+    SchedulerConfig,
+    simulate,
+)
+from repro.serving.trace import TraceConfig, generate_requests
+
+LM = BatchLatencyModel(c0=25.0, c1=1.0)
+SYSTEMS = ("orloj", "clockwork", "nexus", "clipper")
+
+
+def run_case(
+    apps,
+    slo_scale: float,
+    *,
+    n_requests: int = 1_200,
+    utilization: float = 0.85,
+    seed: int = 7,
+    lm: BatchLatencyModel | None = None,
+    systems=SYSTEMS,
+) -> dict[str, tuple[float, float]]:
+    """Returns {system: (finish_rate, scheduler_us_per_request)}."""
+    lm = lm or LM
+    rs = generate_requests(
+        apps,
+        lm,
+        slo_scale=slo_scale,
+        cfg=TraceConfig(n_requests=n_requests, utilization=utilization, seed=seed),
+    )
+    warm = np.concatenate(list(rs.app_history.values()))
+    out = {}
+    for name in systems:
+        if name == "orloj":
+            sched = OrlojScheduler(lm, initial_dists=rs.initial_dists())
+        else:
+            cls = {
+                "clockwork": ClockworkScheduler,
+                "nexus": NexusScheduler,
+                "clipper": ClipperScheduler,
+            }[name]
+            sched = cls(lm, init_samples=warm)
+        reqs = rs.fresh()
+        t0 = time.perf_counter()
+        res = simulate(reqs, sched, ModelExecutor(lm))
+        wall = time.perf_counter() - t0
+        out[name] = (res.finish_rate, wall / n_requests * 1e6)
+    return out
+
+
+def emit(rows: list[str]) -> None:
+    for r in rows:
+        print(r, flush=True)
+
+
+def case_rows(table: str, case: str, slo: float, result) -> list[str]:
+    return [
+        f"{table}/{case}/slo{slo:g}/{sys},{us:.1f},finish_rate={fr:.3f}"
+        for sys, (fr, us) in result.items()
+    ]

@@ -1,0 +1,70 @@
+"""Fig. 12: priority-queue insertion / query microbenchmark.
+
+Reproduces the O(log² n) scaling study for our Bentley–Saxe hull queue
+(the paper's Overmars–van Leeuwen replacement; DESIGN.md §Substitutions).
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import HullQueue
+
+
+def fig12_queue(full: bool = False) -> None:
+    sizes = (10, 100, 1_000, 10_000) if not full else (10, 32, 100, 316, 1_000, 3_162, 10_000)
+    rng = np.random.default_rng(0)
+    for n in sizes:
+        # --- insertion: average per-request time filling to n
+        reps = 3
+        ins_total = 0.0
+        for _ in range(reps):
+            q = HullQueue()
+            coeffs = rng.normal(size=(n, 2)) * 50
+            t0 = time.perf_counter()
+            for i in range(n):
+                q.insert(i, float(coeffs[i, 0]), float(coeffs[i, 1]))
+            ins_total += time.perf_counter() - t0
+        ins_us = ins_total / (reps * n) * 1e6
+
+        # --- query with a line of random slope
+        q = HullQueue()
+        coeffs = rng.normal(size=(n, 2)) * 50
+        for i in range(n):
+            q.insert(i, float(coeffs[i, 0]), float(coeffs[i, 1]))
+        xs = np.exp(rng.uniform(0, 10, size=100))
+        t0 = time.perf_counter()
+        for x in xs:
+            q.argmax(float(x))
+        qry_us = (time.perf_counter() - t0) / xs.size * 1e6
+
+        log2n = np.log2(max(n, 2)) ** 2
+        print(f"fig12/insert/n{n},{ins_us:.2f},log2sq={log2n:.1f}", flush=True)
+        print(f"fig12/query/n{n},{qry_us:.2f},log2sq={log2n:.1f}", flush=True)
+
+
+def fig12_mixed_ops(full: bool = False) -> None:
+    """Sustained scheduler-like mix: insert + milestone updates + pops."""
+    rng = np.random.default_rng(1)
+    n = 5_000 if full else 2_000
+    q = HullQueue()
+    t0 = time.perf_counter()
+    alive = []
+    ops = 0
+    for i in range(n):
+        q.insert(i, float(rng.normal() * 50), float(rng.normal() * 50))
+        alive.append(i)
+        ops += 1
+        if i % 3 == 0 and len(alive) > 4:
+            k = alive.pop(rng.integers(0, len(alive)))
+            q.update(k, float(rng.normal() * 50), float(rng.normal() * 50))
+            alive.append(k)
+            ops += 1
+        if i % 5 == 0 and len(alive) > 8:
+            got = q.pop_max(float(np.exp(rng.uniform(0, 8))))
+            alive.remove(got[0])
+            ops += 1
+    us = (time.perf_counter() - t0) / ops * 1e6
+    print(f"fig12/mixed/n{n},{us:.2f},ops={ops}", flush=True)

@@ -1,0 +1,52 @@
+"""Benchmark harness: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV.  ``--full`` runs the complete
+grids (paper-size); the default is a reduced sweep that finishes in
+minutes on one CPU core.
+
+    PYTHONPATH=src python -m benchmarks.run [--full] [--only table2,fig12]
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default="", help="comma-separated benchmark names")
+    args = ap.parse_args()
+
+    from . import ablation, cluster_scale, queue_micro, sensitivity, tables
+    from .roofline import bench_roofline
+
+    benches = {
+        "ablation": ablation.ablation,
+        "cluster": cluster_scale.cluster_scale,
+        "table2": tables.table2_bimodal_std,
+        "table3": tables.table3_modality,
+        "fig9": tables.fig9_unequal_peaks,
+        "table4": tables.table4_static,
+        "table5": tables.table5_real_tasks,
+        "fig12": queue_micro.fig12_queue,
+        "fig12b": queue_micro.fig12_mixed_ops,
+        "fig13": sensitivity.fig13_b_sweep,
+        "fig14": sensitivity.fig14_min_exec,
+        "roofline": bench_roofline,
+    }
+    only = [s for s in args.only.split(",") if s]
+    print("name,us_per_call,derived")
+    t0 = time.time()
+    for name, fn in benches.items():
+        if only and name not in only:
+            continue
+        print(f"# --- {name} ---", file=sys.stderr, flush=True)
+        fn(full=args.full)
+    print(f"# total {time.time()-t0:.1f}s", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,49 @@
+"""Quickstart: ORLOJ vs. the baselines on a dynamic-DNN workload (paper
+Fig. 3 in miniature).
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+import numpy as np
+
+from repro.core import (
+    BatchLatencyModel,
+    ClipperScheduler,
+    ClockworkScheduler,
+    ModelExecutor,
+    NexusScheduler,
+    OrlojScheduler,
+    simulate,
+)
+from repro.serving.trace import TraceConfig, generate_requests
+from repro.serving.workload import bimodal
+
+
+def main() -> None:
+    # Eq. 3 latency model: 25 ms fixed overhead + 1 ms per size unit.
+    lm = BatchLatencyModel(c0=25.0, c1=1.0)
+    apps = bimodal(std=1.0)  # two applications, short & long requests
+
+    print(f"{'SLO×P99':>8s} {'orloj':>8s} {'clockwork':>10s} {'nexus':>8s} {'clipper':>8s}")
+    for slo_scale in (1.5, 2.0, 3.0, 5.0):
+        rs = generate_requests(
+            apps, lm, slo_scale=slo_scale,
+            cfg=TraceConfig(n_requests=1_500, utilization=0.85, seed=7),
+        )
+        warm = np.concatenate(list(rs.app_history.values()))
+        row = []
+        for mk in (
+            lambda: OrlojScheduler(lm, initial_dists=rs.initial_dists()),
+            lambda: ClockworkScheduler(lm, init_samples=warm),
+            lambda: NexusScheduler(lm, init_samples=warm),
+            lambda: ClipperScheduler(lm, init_samples=warm),
+        ):
+            res = simulate(rs.fresh(), mk(), ModelExecutor(lm))
+            row.append(res.finish_rate)
+        print(
+            f"{slo_scale:8.1f} {row[0]:8.2f} {row[1]:10.2f} {row[2]:8.2f} {row[3]:8.2f}"
+        )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,33 @@
+"""Train a small model end to end on the synthetic corpus (data pipeline →
+sharded train step → AdamW → checkpoint), verifying the loss decreases.
+
+    PYTHONPATH=src python examples/train_small.py
+"""
+
+import subprocess
+import sys
+
+
+def main() -> None:
+    subprocess.run(
+        [
+            sys.executable,
+            "-m",
+            "repro.launch.train",
+            "--arch",
+            "orloj_gpt",
+            "--steps",
+            "60",
+            "--batch",
+            "8",
+            "--seq",
+            "128",
+            "--log-every",
+            "20",
+        ],
+        check=True,
+    )
+
+
+if __name__ == "__main__":
+    main()

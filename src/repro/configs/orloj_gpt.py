@@ -1,0 +1,18 @@
+"""Paper-scale example model (~100M): the kind of dynamic NLP model ORLOJ
+serves (GPT/BART class, Table 1).  Used by the end-to-end examples and the
+real-execution serving engine."""
+from ..models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="orloj-gpt",
+    arch_type="dense",
+    n_layers=12,
+    d_model=768,
+    n_heads=12,
+    n_kv_heads=12,
+    d_ff=3072,
+    vocab_size=32000,
+    norm="layernorm",
+    mlp="gelu",
+    source="paper Table 1 (GPT-class)",
+)

@@ -1,0 +1,63 @@
+"""ORLOJ core: distribution-aware batch scheduling for dynamic DNN serving.
+
+The paper's primary contribution (Yu et al., 2022) as a composable library:
+
+- :mod:`repro.core.distributions` — empirical execution-time distributions,
+  max order statistics (Eq. 6/8), the batch latency model (Eq. 3–5).
+- :mod:`repro.core.priority` — the time-varying batch-aware priority score
+  (Eq. 2) with milestone/overflow handling (§4.4).
+- :mod:`repro.core.hull` — the O(log² n) dynamic convex-hull priority queue.
+- :mod:`repro.core.scheduler` — Algorithm 1.
+- :mod:`repro.core.baselines` — Clockwork/Nexus/Clipper/EDF-style baselines.
+- :mod:`repro.core.profiler` — the long-term feedback loop (§3.2).
+- :mod:`repro.core.simulator` — the discrete-event evaluation harness (§5).
+"""
+
+from .baselines import (
+    ClipperScheduler,
+    ClockworkScheduler,
+    EDFScheduler,
+    NexusScheduler,
+)
+from .distributions import (
+    BatchLatencyModel,
+    EmpiricalDistribution,
+    hetero_max,
+    iid_max,
+    mixture,
+    ozbey_max_pdf,
+)
+from .hull import HullQueue
+from .priority import DEFAULT_B, BinScoreModel, Score
+from .profiler import OnlineProfiler, ProfilerConfig
+from .request import PiecewiseStepCost, Request, StepCost
+from .scheduler import Batch, OrlojScheduler, SchedulerConfig
+from .simulator import ModelExecutor, SimResult, simulate
+
+__all__ = [
+    "BatchLatencyModel",
+    "EmpiricalDistribution",
+    "hetero_max",
+    "iid_max",
+    "mixture",
+    "ozbey_max_pdf",
+    "HullQueue",
+    "DEFAULT_B",
+    "BinScoreModel",
+    "Score",
+    "OnlineProfiler",
+    "ProfilerConfig",
+    "PiecewiseStepCost",
+    "Request",
+    "StepCost",
+    "Batch",
+    "OrlojScheduler",
+    "SchedulerConfig",
+    "ClipperScheduler",
+    "ClockworkScheduler",
+    "EDFScheduler",
+    "NexusScheduler",
+    "ModelExecutor",
+    "SimResult",
+    "simulate",
+]

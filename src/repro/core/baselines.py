@@ -1,0 +1,358 @@
+"""Baseline schedulers the paper compares against (§2.3, §5).
+
+All baselines share the simulator interface of :class:`OrlojScheduler`:
+``on_arrival``, ``next_batch``, ``on_batch_done``.  They model the
+*scheduling policies* of the systems as characterised by the paper:
+
+- :class:`ClockworkScheduler` — plan-ahead with a single point estimate per
+  batch size and strict action windows: when a batch overruns its predicted
+  latency, the pre-committed next batch misses its window and fails
+  ("frequent time-out error in its scheduler, causing the subsequent batch
+  to fail", §2.3).
+- :class:`NexusScheduler` — ahead-of-time squishy-bin plan from the *mean*
+  execution time: a fixed batch size chosen so that queueing + execution
+  fits the SLO, FIFO service.
+- :class:`ClipperScheduler` — reactive AIMD adaptive batching on observed
+  latencies, FIFO service.
+- :class:`EDFScheduler` — earliest-deadline-first with greedy batching on a
+  mean estimate (ablation: plan-ahead without distributions).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import math
+from collections import deque
+from typing import Sequence
+
+import numpy as np
+
+from .distributions import BatchLatencyModel, EmpiricalDistribution
+from .request import Request
+from .scheduler import Batch
+
+__all__ = [
+    "ClockworkScheduler",
+    "NexusScheduler",
+    "ClipperScheduler",
+    "EDFScheduler",
+]
+
+
+class _PointEstimator:
+    """Sliding-window point estimator of the standalone execution time."""
+
+    def __init__(
+        self,
+        kind: str = "mean",
+        window: int = 512,
+        init_samples: Sequence[float] | None = None,
+    ) -> None:
+        self.kind = kind
+        self.buf: deque[float] = deque(maxlen=window)
+        if init_samples is not None:
+            for x in init_samples:
+                self.buf.append(float(x))
+
+    def observe(self, x: float) -> None:
+        self.buf.append(float(x))
+
+    def value(self) -> float:
+        if not self.buf:
+            return 10.0
+        arr = np.asarray(self.buf)
+        if self.kind == "mean":
+            return float(arr.mean())
+        if self.kind == "p99":
+            return float(np.quantile(arr, 0.99))
+        if self.kind == "max":
+            return float(arr.max())
+        raise ValueError(self.kind)
+
+
+class _BaselineBase:
+    def __init__(
+        self,
+        latency_model: BatchLatencyModel,
+        batch_sizes: tuple[int, ...] = (1, 2, 4, 8, 16),
+        estimator: str = "mean",
+        init_samples: Sequence[float] | None = None,
+    ) -> None:
+        self.latency_model = latency_model
+        self.batch_sizes = tuple(sorted(batch_sizes))
+        self.est = _PointEstimator(estimator, init_samples=init_samples)
+        self.n_timed_out = 0
+
+    def est_batch(self, bs: int) -> float:
+        return self.latency_model.c0 + self.latency_model.c1 * bs * self.est.value()
+
+    def on_batch_done(
+        self, batch: Batch, now: float, alone_times: Sequence[float]
+    ) -> None:
+        for x in alone_times:
+            self.est.observe(x)
+
+    @property
+    def n_pending(self) -> int:  # pragma: no cover - overridden where needed
+        raise NotImplementedError
+
+
+class ClockworkScheduler(_BaselineBase):
+    """Clockwork-style plan-ahead scheduling with strict action windows."""
+
+    name = "clockwork"
+
+    def __init__(
+        self,
+        *args,
+        window_slack: float = 10.0,
+        obs_window: int = 32,
+        adaptive: bool = False,
+        **kwargs,
+    ) -> None:
+        # Paper-faithful mode (default, ``adaptive=False``): Clockwork
+        # profiles each batch size *offline once* — a single point estimate
+        # (≈ the mean over its profiling inputs).  Exact for static DNNs;
+        # for data-dependent models it under-predicts the batch max almost
+        # every time, tripping the strict action window of the pre-planned
+        # next batch — the "fail-every-other-batch" pattern of §2.3.
+        #
+        # ``adaptive=True`` is a *hardened* beyond-paper variant: per-batch-
+        # size max-of-sliding-window over observed batch latencies.
+        kwargs.setdefault("estimator", "mean")
+        super().__init__(*args, **kwargs)
+        self.adaptive = adaptive
+        self.window_slack = window_slack  # ms tolerance on the action window
+        self._bs_obs: dict[int, deque[float]] = {}
+        self._obs_window = obs_window
+        self._edf: list[tuple[float, int, Request]] = []
+        self._pending: dict[int, Request] = {}
+        # Predicted completion of the in-flight batch: the next action is
+        # scheduled to start there, with a strict lateness window.
+        self._planned_start: float | None = None
+
+    def est_batch(self, bs: int) -> float:
+        if self.adaptive:
+            obs = self._bs_obs.get(bs)
+            if obs:
+                return max(obs)
+        # Offline profile: Eq. 3 with the point estimate of the alone time.
+        return self.latency_model.c0 + self.latency_model.c1 * bs * self.est.value()
+
+    def on_batch_done(self, batch, now, alone_times) -> None:
+        if self.adaptive:
+            # Online adaptation is the hardened variant only; stock
+            # Clockwork keeps its offline profile fixed.
+            super().on_batch_done(batch, now, alone_times)
+            r0 = batch.requests[0]
+            if r0.started is not None and r0.finished is not None:
+                self._bs_obs.setdefault(
+                    len(batch.requests), deque(maxlen=self._obs_window)
+                ).append(r0.finished - r0.started)
+
+    def on_arrival(self, req: Request, now: float) -> None:
+        self._pending[req.rid] = req
+        heapq.heappush(self._edf, (req.deadline, req.rid, req))
+
+    def _pop_feasible(self, now: float) -> list[Request]:
+        """Drop hopeless heads; return live EDF-ordered queue view."""
+        live: list[Request] = []
+        while self._edf:
+            deadline, rid, req = self._edf[0]
+            if rid not in self._pending:
+                heapq.heappop(self._edf)
+                continue
+            if now + self.est_batch(1) > deadline:
+                heapq.heappop(self._edf)
+                del self._pending[rid]
+                req.dropped = now
+                self.n_timed_out += 1
+                continue
+            break
+        live = sorted(
+            (r for r in self._pending.values()), key=lambda r: r.deadline
+        )
+        return live
+
+    def _plan(self, at: float, among: list[Request] | None = None) -> list[Request]:
+        live = among if among is not None else self._pop_feasible(at)
+        if not live:
+            return []
+        # Largest batch size that still meets the earliest deadline under
+        # the point estimate.
+        chosen = 1
+        for bs in self.batch_sizes:
+            if bs <= len(live) and at + self.est_batch(bs) <= live[0].deadline:
+                chosen = bs
+        return live[:chosen]
+
+    def next_batch(self, now: float) -> tuple[Batch | None, float | None]:
+        # The controller scheduled the next action at the *predicted*
+        # completion of the in-flight batch.  If the batch overran the
+        # prediction by more than the action window, the planned action is
+        # rejected by the worker: the batch that would have run fails.
+        if self._planned_start is not None:
+            planned = self._planned_start
+            self._planned_start = None
+            if now > planned + self.window_slack:
+                victims = [
+                    r
+                    for r in sorted(
+                        self._pending.values(), key=lambda r: r.deadline
+                    )
+                    if r.release <= planned
+                ]
+                victims = self._plan(planned, among=victims)
+                for r in victims:
+                    self._pending.pop(r.rid, None)
+                    r.dropped = now
+                    self.n_timed_out += 1
+        picked = self._plan(now)
+        for r in picked:
+            self._pending.pop(r.rid, None)
+        if not picked:
+            return None, None
+        self._planned_start = now + self.est_batch(len(picked))
+        return Batch(picked, len(picked)), None
+
+    @property
+    def n_pending(self) -> int:
+        return len(self._pending)
+
+
+class NexusScheduler(_BaselineBase):
+    """Nexus-style ahead-of-time plan: fixed batch size from the mean."""
+
+    name = "nexus"
+
+    def __init__(self, *args, replan_interval: float = 5_000.0, **kwargs) -> None:
+        kwargs.setdefault("estimator", "mean")
+        super().__init__(*args, **kwargs)
+        self.replan_interval = replan_interval
+        self._fifo: deque[Request] = deque()
+        self._plan_bs = self.batch_sizes[0]
+        self._last_plan = -math.inf
+
+    def _replan(self, now: float, slo: float) -> None:
+        if now - self._last_plan < self.replan_interval:
+            return
+        self._last_plan = now
+        # Squishy-bin rule: exec + (worst-case) queueing = 2·est(B) ≤ SLO.
+        chosen = self.batch_sizes[0]
+        for bs in self.batch_sizes:
+            if 2.0 * self.est_batch(bs) <= slo:
+                chosen = bs
+        self._plan_bs = chosen
+
+    def on_arrival(self, req: Request, now: float) -> None:
+        self._fifo.append(req)
+        self._replan(now, req.slo)
+
+    def next_batch(self, now: float) -> tuple[Batch | None, float | None]:
+        # Drop expired heads (mean estimate says they cannot make it).
+        while self._fifo and now + self.est_batch(1) > self._fifo[0].deadline:
+            req = self._fifo.popleft()
+            req.dropped = now
+            self.n_timed_out += 1
+        if not self._fifo:
+            return None, None
+        b = self._plan_bs
+        head = self._fifo[0]
+        if len(self._fifo) < b:
+            # Wait for the batch to fill unless the head forces a flush.
+            flush_at = head.deadline - self.est_batch(b)
+            if now < flush_at:
+                return None, flush_at
+            b = len(self._fifo)
+        picked = [self._fifo.popleft() for _ in range(min(b, len(self._fifo)))]
+        return Batch(picked, len(picked)), None
+
+    @property
+    def n_pending(self) -> int:
+        return len(self._fifo)
+
+
+class ClipperScheduler(_BaselineBase):
+    """Clipper-style reactive AIMD adaptive batching, FIFO service."""
+
+    name = "clipper"
+
+    def __init__(self, *args, **kwargs) -> None:
+        kwargs.setdefault("estimator", "mean")
+        super().__init__(*args, **kwargs)
+        self._fifo: deque[Request] = deque()
+        self._cap = float(self.batch_sizes[-1])
+        self._slo_hint: float | None = None
+
+    def on_arrival(self, req: Request, now: float) -> None:
+        self._fifo.append(req)
+        self._slo_hint = req.slo
+
+    def next_batch(self, now: float) -> tuple[Batch | None, float | None]:
+        while self._fifo and now + self.est_batch(1) > self._fifo[0].deadline:
+            req = self._fifo.popleft()
+            req.dropped = now
+            self.n_timed_out += 1
+        if not self._fifo:
+            return None, None
+        k = min(int(self._cap), len(self._fifo))
+        k = max(k, 1)
+        picked = [self._fifo.popleft() for _ in range(k)]
+        return Batch(picked, len(picked)), None
+
+    def on_batch_done(
+        self, batch: Batch, now: float, alone_times: Sequence[float]
+    ) -> None:
+        super().on_batch_done(batch, now, alone_times)
+        if self._slo_hint is None:
+            return
+        # AIMD on observed batch *execution latency* vs the SLO budget
+        # (Clipper's adaptive batching targets exec-under-SLO).
+        r0 = batch.requests[0]
+        if r0.started is not None and r0.finished is not None:
+            duration = r0.finished - r0.started
+            if duration > self._slo_hint:
+                self._cap = max(1.0, self._cap * 0.5)
+            else:
+                self._cap = min(float(self.batch_sizes[-1]), self._cap + 1.0)
+
+    @property
+    def n_pending(self) -> int:
+        return len(self._fifo)
+
+
+class EDFScheduler(_BaselineBase):
+    """EDF + greedy batch sizing on a mean point estimate (ablation)."""
+
+    name = "edf"
+
+    def __init__(self, *args, **kwargs) -> None:
+        kwargs.setdefault("estimator", "mean")
+        super().__init__(*args, **kwargs)
+        self._pending: dict[int, Request] = {}
+
+    def on_arrival(self, req: Request, now: float) -> None:
+        self._pending[req.rid] = req
+
+    def next_batch(self, now: float) -> tuple[Batch | None, float | None]:
+        live = sorted(self._pending.values(), key=lambda r: r.deadline)
+        while live and now + self.est_batch(1) > live[0].deadline:
+            r = live.pop(0)
+            del self._pending[r.rid]
+            r.dropped = now
+            self.n_timed_out += 1
+        if not live:
+            return None, None
+        chosen = 1
+        for bs in self.batch_sizes:
+            if bs <= len(live) and now + self.est_batch(bs) <= live[0].deadline:
+                chosen = bs
+        picked = live[:chosen]
+        for r in picked:
+            del self._pending[r.rid]
+        return Batch(picked, len(picked)), None
+
+    @property
+    def n_pending(self) -> int:
+        return len(self._pending)

@@ -1,0 +1,141 @@
+"""Time-varying batch-aware priority score (paper §4.1, Eq. 2; §4.4).
+
+For a request with deadline ``D``, miss cost ``c`` and (batch) execution-time
+histogram bins ``[l1, l2)`` with frequency ``h``, the per-bin score is
+
+             ⎧ (hc / (E[L] b)) (e^{b l2} − e^{b l1}) e^{−bD} e^{bt}   t < D − l2
+    p_i(t) = ⎨ hc/(E[L] b) − (hc/(E[L] b)) e^{b l1} e^{−bD} e^{bt}   D−l2 ≤ t < D−l1
+             ⎩ 0                                                     D−l1 ≤ t
+
+so every bin (and hence the request) is of the form ``p(t) = α e^{bt} + β``
+(§4.4), with regime changes ("milestones") at ``D − l2`` and ``D − l1``.
+
+Overflow handling (§4.4): ``D`` and ``t`` are measured relative to a sliding
+*base time*.  With millisecond resolution and ``b = 1e-4`` the exponentials
+stay in float64 range for ~1000 s of scheduling before the base must be
+reset (and all scores recomputed — Algorithm 1 lines 2–4).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from .distributions import EmpiricalDistribution
+from .request import PiecewiseStepCost, Request
+
+__all__ = ["BinScoreModel", "Score", "DEFAULT_B", "RESET_EXPONENT"]
+
+DEFAULT_B = 1e-4  # per millisecond, paper §4.4 / §5.6
+# Reset the base time when b·(t − base) exceeds this (e^60 ≈ 1e26; products
+# of two such terms stay well inside float64 range ~1e308).
+RESET_EXPONENT = 60.0
+
+
+@dataclasses.dataclass(frozen=True)
+class Score:
+    """A request's priority at some instant: ``p(t) = α e^{b(t−base)} + β``.
+
+    ``milestone`` is the next absolute time at which (α, β) change.
+    """
+
+    alpha: float
+    beta: float
+    milestone: float
+
+    def value(self, t: float, base: float, b: float) -> float:
+        return self.alpha * np.exp(b * (t - base)) + self.beta
+
+
+class BinScoreModel:
+    """Priority computation for one batch-execution-time histogram.
+
+    One instance exists per (model, batch size): the histogram is the
+    distribution of ``L_B`` for that batch size derived from the mixture of
+    all app distributions (§4.3), so it is shared by all requests and can be
+    precomputed off the critical path.
+    """
+
+    def __init__(self, batch_dist: EmpiricalDistribution, b: float = DEFAULT_B):
+        self.b = float(b)
+        self.l1 = batch_dist.edges[:-1].copy()
+        self.l2 = batch_dist.edges[1:].copy()
+        self.h = batch_dist.probs.copy()
+        self.e_l = batch_dist.mean()
+        if self.e_l <= 0:
+            raise ValueError("batch execution time must have positive mean")
+        # Precompute bin exponentials: e^{b l1}, e^{b l2} (l in ms; b·l ≪ 1
+        # for realistic latencies so these never overflow).
+        self._ebl1 = np.exp(self.b * self.l1)
+        self._ebl2 = np.exp(self.b * self.l2)
+        self._k = 1.0 / (self.e_l * self.b)  # hc/(E[L] b) sans h·c
+
+    # ------------------------------------------------------------------
+    def _score_single_step(
+        self, deadline: float, cost: float, t: float, base: float
+    ) -> tuple[float, float, float]:
+        """(α, β, next_milestone) for a single-step cost at time ``t``."""
+        d_rel = deadline - base
+        ebD = np.exp(-self.b * d_rel)
+        coef = self._k * cost * self.h  # hc/(E[L] b) per bin
+
+        m_hi = deadline - self.l2  # regime A→B milestones (absolute)
+        m_lo = deadline - self.l1  # regime B→C milestones (absolute)
+
+        in_a = t < m_hi
+        in_b = (~in_a) & (t < m_lo)
+
+        alpha = float(
+            np.sum(np.where(in_a, coef * (self._ebl2 - self._ebl1) * ebD, 0.0))
+            + np.sum(np.where(in_b, -coef * self._ebl1 * ebD, 0.0))
+        )
+        beta = float(np.sum(np.where(in_b, coef, 0.0)))
+
+        future = np.concatenate([m_hi[m_hi > t], m_lo[m_lo > t]])
+        milestone = float(future.min()) if future.size else np.inf
+        return alpha, beta, milestone
+
+    def score(self, req: Request, t: float, base: float) -> Score:
+        """Priority of ``req`` at time ``t`` (supports piecewise-step costs
+        via the Appendix-B decomposition)."""
+        cost_fn = req.cost_fn()
+        steps = cost_fn.steps() if isinstance(cost_fn, PiecewiseStepCost) else [cost_fn]
+        alpha = beta = 0.0
+        milestone = np.inf
+        for step in steps:
+            a, b_, m = self._score_single_step(step.deadline, step.cost, t, base)
+            alpha += a
+            beta += b_
+            milestone = min(milestone, m)
+        return Score(alpha, beta, milestone)
+
+    def value(self, req: Request, t: float, base: float) -> float:
+        """Direct evaluation of p(t) — used by tests as the oracle."""
+        s = self.score(req, t, base)
+        return s.value(t, base, self.b)
+
+    def value_reference(self, req: Request, t: float, base: float) -> float:
+        """Literal Eq. 2 evaluation, bin by bin, no (α, β) folding."""
+        cost_fn = req.cost_fn()
+        steps = (
+            cost_fn.steps() if isinstance(cost_fn, PiecewiseStepCost) else [cost_fn]
+        )
+        total = 0.0
+        for step in steps:
+            d_rel = step.deadline - base
+            t_rel = t - base
+            for l1, l2, h in zip(self.l1, self.l2, self.h):
+                k = h * step.cost / (self.e_l * self.b)
+                if t_rel < d_rel - l2:
+                    total += (
+                        k
+                        * (np.exp(self.b * l2) - np.exp(self.b * l1))
+                        * np.exp(-self.b * d_rel)
+                        * np.exp(self.b * t_rel)
+                    )
+                elif t_rel < d_rel - l1:
+                    total += k - k * np.exp(self.b * l1) * np.exp(
+                        -self.b * d_rel
+                    ) * np.exp(self.b * t_rel)
+        return float(total)

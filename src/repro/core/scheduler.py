@@ -1,0 +1,287 @@
+"""ORLOJ's batch-aware distribution-based scheduler (paper §3.2, §4, Alg. 1).
+
+Structure per Algorithm 1:
+
+- one priority queue (dynamic convex hull, :mod:`.hull`) per supported batch
+  size ``bs``, holding every pending request still *feasible* at that batch
+  size, scored by the Eq.-2 batch-aware priority with the ``L_B(bs)``
+  histogram (mixture of all app distributions, §4.3);
+- a deadline heap per batch size (the paper uses a Fibonacci heap) driving
+  the drop phase (lines 10–14);
+- a milestone heap triggering lazy (α, β) re-computation (lines 5–9);
+- base-time reset for exponential-overflow handling (lines 2–4, §4.4).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import math
+from typing import Sequence
+
+import numpy as np
+
+from .distributions import (
+    BatchLatencyModel,
+    EmpiricalDistribution,
+    hetero_max,
+    iid_max,
+    mixture,
+)
+from .hull import HullQueue
+from .priority import DEFAULT_B, RESET_EXPONENT, BinScoreModel
+from .profiler import OnlineProfiler, ProfilerConfig
+from .request import Request
+
+__all__ = ["SchedulerConfig", "OrlojScheduler", "Batch"]
+
+
+@dataclasses.dataclass(frozen=True)
+class SchedulerConfig:
+    batch_sizes: tuple[int, ...] = (1, 2, 4, 8, 16)
+    b: float = DEFAULT_B  # anticipated-delay parameter (§4.1, §5.6)
+    n_bins: int = 12
+    # 'earliest' = prose of §3.2 (earliest D_Qbs first, larger bs on ties);
+    # 'paper_desc' = the literal Algorithm-1 line-16 ordering.
+    bs_order: str = "earliest"
+    # Refine the drop-phase feasibility estimate with the request's own app
+    # distribution: E[max(L_app, L_mix^{bs-1})] instead of E[L_mix^{bs}].
+    refine_feasibility: bool = True
+    drop_safety: float = 1.0  # scale on EstimateBatchLatency in the drop phase
+
+
+@dataclasses.dataclass
+class Batch:
+    requests: list[Request]
+    batch_size: int
+
+    def __len__(self) -> int:
+        return len(self.requests)
+
+
+class _BsState:
+    """Per-batch-size state: hull queue + deadline heap + score model."""
+
+    __slots__ = ("hull", "deadline_heap", "score_model", "est_latency")
+
+    def __init__(self) -> None:
+        self.hull = HullQueue()
+        self.deadline_heap: list[tuple[float, int]] = []
+        self.score_model: BinScoreModel | None = None
+        self.est_latency: float = 0.0
+
+
+class OrlojScheduler:
+    """Distribution-aware, batch-aware priority scheduler (Algorithm 1)."""
+
+    name = "orloj"
+
+    def __init__(
+        self,
+        latency_model: BatchLatencyModel,
+        cfg: SchedulerConfig | None = None,
+        profiler: OnlineProfiler | None = None,
+        initial_dists: dict[str, EmpiricalDistribution] | None = None,
+    ) -> None:
+        self.cfg = cfg or SchedulerConfig()
+        self.latency_model = latency_model
+        self.profiler = profiler or OnlineProfiler(ProfilerConfig())
+        self._pending: dict[int, Request] = {}
+        self._feasible: dict[int, set[int]] = {}  # rid -> feasible batch sizes
+        self._bs_state: dict[int, _BsState] = {
+            bs: _BsState() for bs in self.cfg.batch_sizes
+        }
+        self._milestones: list[tuple[float, int, int]] = []  # (time, rid, bs)
+        self._base = 0.0
+        self._app_dists: dict[str, EmpiricalDistribution] = dict(initial_dists or {})
+        self._app_bs_est: dict[tuple[str, int], float] = {}
+        self._default_dist = EmpiricalDistribution.delta(10.0)
+        self.n_timed_out = 0
+        self._rebuild_models()
+
+    # ------------------------------------------------------------------
+    # Model (distribution) maintenance
+    # ------------------------------------------------------------------
+    def _mixture(self) -> EmpiricalDistribution:
+        dists = list(self._app_dists.values())
+        if not dists:
+            return self._default_dist
+        return mixture(dists)
+
+    def _rebuild_models(self) -> None:
+        """Precompute per-batch-size L_B histograms, score models and
+        expected latencies from the current app distributions (§4.3 — this
+        is the heavy computation moved off the critical path)."""
+        mix = self._mixture()
+        self._mix = mix
+        self._app_bs_est.clear()
+        for bs, st in self._bs_state.items():
+            max_dist = iid_max(mix, bs)
+            batch_dist = self.latency_model.batch_dist(max_dist, bs)
+            st.score_model = BinScoreModel(batch_dist, b=self.cfg.b)
+            st.est_latency = self.latency_model.expected_batch_time(mix, bs)
+
+    def estimate_batch_latency(self, req: Request, bs: int) -> float:
+        """EstimateBatchLatency(r, bs) — Algorithm 1 line 11."""
+        if not self.cfg.refine_feasibility or req.app_id not in self._app_dists:
+            return self._bs_state[bs].est_latency
+        key = (req.app_id, bs)
+        got = self._app_bs_est.get(key)
+        if got is None:
+            own = self._app_dists[req.app_id]
+            if bs == 1:
+                max_dist = own
+            else:
+                max_dist = hetero_max([own, iid_max(self._mix, bs - 1)])
+            got = self.latency_model.c0 + self.latency_model.c1 * bs * max_dist.mean()
+            self._app_bs_est[key] = got
+        return got
+
+    # ------------------------------------------------------------------
+    # Arrival / bookkeeping
+    # ------------------------------------------------------------------
+    def on_arrival(self, req: Request, now: float) -> None:
+        self._pending[req.rid] = req
+        feas = set()
+        for bs, st in self._bs_state.items():
+            feas.add(bs)
+            sc = st.score_model.score(req, now, self._base)
+            st.hull.insert(req.rid, sc.alpha, sc.beta)
+            heapq.heappush(st.deadline_heap, (req.deadline, req.rid))
+            if math.isfinite(sc.milestone):
+                heapq.heappush(self._milestones, (sc.milestone, req.rid, bs))
+        self._feasible[req.rid] = feas
+
+    def on_batch_done(
+        self, batch: Batch, now: float, alone_times: Sequence[float]
+    ) -> None:
+        """Feedback: sampled finished requests go to the async profiler."""
+        for req, alone in zip(batch.requests, alone_times):
+            self.profiler.observe(req.app_id, alone, now)
+        snap = self.profiler.maybe_pickup(now)
+        if snap:
+            self._app_dists = snap
+            self._rebuild_models()
+            self._recompute_all(now)
+
+    # ------------------------------------------------------------------
+    # Score maintenance (Algorithm 1 lines 1–9)
+    # ------------------------------------------------------------------
+    def _x(self, now: float) -> float:
+        return math.exp(self.cfg.b * (now - self._base))
+
+    def _maybe_reset_base(self, now: float) -> None:
+        if self.cfg.b * (now - self._base) > RESET_EXPONENT:
+            self._base = now
+            self._recompute_all(now)
+
+    def _recompute_all(self, now: float) -> None:
+        self._milestones.clear()
+        for bs, st in self._bs_state.items():
+            st.hull = HullQueue()
+        for req in self._pending.values():
+            for bs in self._feasible[req.rid]:
+                st = self._bs_state[bs]
+                sc = st.score_model.score(req, now, self._base)
+                st.hull.insert(req.rid, sc.alpha, sc.beta)
+                if math.isfinite(sc.milestone):
+                    heapq.heappush(self._milestones, (sc.milestone, req.rid, bs))
+
+    def _update_due_scores(self, now: float) -> None:
+        while self._milestones and self._milestones[0][0] <= now:
+            _, rid, bs = heapq.heappop(self._milestones)
+            req = self._pending.get(rid)
+            if req is None or bs not in self._feasible.get(rid, ()):  # stale
+                continue
+            st = self._bs_state[bs]
+            sc = st.score_model.score(req, now, self._base)
+            st.hull.update(rid, sc.alpha, sc.beta)
+            if math.isfinite(sc.milestone):
+                heapq.heappush(self._milestones, (sc.milestone, rid, bs))
+
+    # ------------------------------------------------------------------
+    # Drop phase (Algorithm 1 lines 10–14)
+    # ------------------------------------------------------------------
+    def _drop_phase(self, now: float) -> None:
+        for bs, st in self._bs_state.items():
+            while st.deadline_heap:
+                deadline, rid = st.deadline_heap[0]
+                req = self._pending.get(rid)
+                if req is None or bs not in self._feasible.get(rid, ()):
+                    heapq.heappop(st.deadline_heap)  # lazy removal
+                    continue
+                est = self.estimate_batch_latency(req, bs) * self.cfg.drop_safety
+                if now + est > deadline:
+                    heapq.heappop(st.deadline_heap)
+                    st.hull.delete(rid)
+                    self._feasible[rid].discard(bs)
+                    if not self._feasible[rid]:  # line 13–14: timed out
+                        self._remove(rid)
+                        req.dropped = now
+                        self.n_timed_out += 1
+                else:
+                    break  # heap is deadline-ordered; the rest are feasible
+
+    def _remove(self, rid: int) -> None:
+        for bs in self._feasible.pop(rid, set()):
+            st = self._bs_state[bs]
+            if rid in st.hull:
+                st.hull.delete(rid)
+        self._pending.pop(rid, None)
+
+    # ------------------------------------------------------------------
+    # Batch selection (Algorithm 1 lines 15–22)
+    # ------------------------------------------------------------------
+    def _earliest_deadline(self, bs: int) -> float | None:
+        st = self._bs_state[bs]
+        while st.deadline_heap:
+            deadline, rid = st.deadline_heap[0]
+            if rid in self._pending and bs in self._feasible.get(rid, ()):
+                return deadline
+            heapq.heappop(st.deadline_heap)
+        return None
+
+    def next_batch(self, now: float) -> tuple[Batch | None, float | None]:
+        """One scheduler iteration.  Returns (batch, next_wake_time)."""
+        self._maybe_reset_base(now)
+        self._update_due_scores(now)
+        self._drop_phase(now)
+
+        candidates: list[tuple[float, int]] = []
+        for bs, st in self._bs_state.items():
+            d = self._earliest_deadline(bs)
+            if d is not None and len(st.hull) >= bs:
+                candidates.append((d, bs))
+        candidate: int | None = None
+        if candidates:
+            if self.cfg.bs_order == "paper_desc":
+                candidates.sort(key=lambda e: (e[0], e[1]), reverse=True)
+            else:  # earliest deadline first, larger batch on ties
+                candidates.sort(key=lambda e: (e[0], -e[1]))
+            candidate = candidates[0][1]
+
+        if candidate is None:
+            wake = self._milestones[0][0] if self._milestones else None
+            return None, wake
+
+        # PopBatch: top `candidate` requests by ORLOJ score.
+        x = self._x(now)
+        st = self._bs_state[candidate]
+        picked: list[Request] = []
+        for _ in range(candidate):
+            got = st.hull.pop_max(x)
+            if got is None:
+                break
+            rid, _val = got
+            req = self._pending[rid]
+            picked.append(req)
+            self._feasible[rid].discard(candidate)
+            self._remove(rid)
+        if not picked:
+            return None, None
+        return Batch(picked, candidate), None
+
+    # -- introspection -------------------------------------------------
+    @property
+    def n_pending(self) -> int:
+        return len(self._pending)

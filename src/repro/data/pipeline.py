@@ -1,0 +1,70 @@
+"""Training data pipeline: synthetic corpus + sharded batch iterator.
+
+The corpus is a Zipf-distributed token stream with short-range Markov
+structure (so the loss actually decreases — useful for the end-to-end
+training example), packed into fixed-length rows.  Batches are placed onto
+the mesh with the same (pod, data)-sharded layout the train step expects,
+so the pipeline composes with pjit without host-side gymnastics.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class DataConfig:
+    vocab_size: int = 32_000
+    seq_len: int = 512
+    batch_size: int = 8
+    zipf_a: float = 1.3
+    markov_order: int = 2
+    seed: int = 0
+
+
+class SyntheticCorpus:
+    """Zipf unigrams re-weighted by a sparse bigram transition table."""
+
+    def __init__(self, cfg: DataConfig):
+        self.cfg = cfg
+        self.rng = np.random.default_rng(cfg.seed)
+        v = cfg.vocab_size
+        ranks = np.arange(1, v + 1, dtype=np.float64)
+        self.unigram = ranks ** (-cfg.zipf_a)
+        self.unigram /= self.unigram.sum()
+        # Each token prefers a small random successor set.
+        self.succ = self.rng.integers(0, v, size=(v, 4))
+
+    def sample_row(self) -> np.ndarray:
+        cfg = self.cfg
+        out = np.empty(cfg.seq_len + 1, np.int32)
+        out[0] = self.rng.choice(cfg.vocab_size, p=self.unigram)
+        for i in range(1, cfg.seq_len + 1):
+            if self.rng.random() < 0.7:  # Markov continuation
+                out[i] = self.succ[out[i - 1], self.rng.integers(0, 4)]
+            else:
+                out[i] = self.rng.choice(cfg.vocab_size, p=self.unigram)
+        return out
+
+    def batch(self) -> dict[str, np.ndarray]:
+        rows = np.stack([self.sample_row() for _ in range(self.cfg.batch_size)])
+        return {"tokens": rows[:, :-1], "labels": rows[:, 1:]}
+
+
+def make_train_iterator(
+    cfg: DataConfig, mesh: Mesh | None = None
+) -> Iterator[dict[str, jax.Array]]:
+    corpus = SyntheticCorpus(cfg)
+    if mesh is not None:
+        dp = tuple(a for a in ("pod", "data") if a in mesh.shape)
+        sharding = NamedSharding(mesh, P(dp if len(dp) > 1 else (dp[0] if dp else None), None))
+    while True:
+        b = corpus.batch()
+        if mesh is not None:
+            b = {k: jax.device_put(v, sharding) for k, v in b.items()}
+        yield b

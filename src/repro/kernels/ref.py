@@ -1,0 +1,73 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose references)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def flash_attention_ref(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    lengths: jax.Array | None = None,
+    window: int = 0,
+) -> jax.Array:
+    """q: (B, H, S, hd); k, v: (B, KV, S, hd) → (B, H, S, hd)."""
+    b, h, s, hd = q.shape
+    kv = k.shape[1]
+    qg = q.reshape(b, kv, h // kv, s, hd)
+    scores = jnp.einsum("bkgsd,bktd->bkgst", qg, k).astype(jnp.float32)
+    scores = scores / np.sqrt(hd)
+    i = jnp.arange(s)[:, None]
+    j = jnp.arange(s)[None, :]
+    mask = jnp.ones((s, s), bool)
+    if causal:
+        mask &= j <= i
+    if window > 0:
+        mask &= j > i - window
+    mask = jnp.broadcast_to(mask[None], (b, s, s))
+    if lengths is not None:
+        mask &= (j[None] < lengths[:, None, None])
+    scores = jnp.where(mask[:, None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    # fully-masked rows → zero output (not NaN)
+    probs = jnp.where(mask[:, None, None], probs, 0.0)
+    out = jnp.einsum("bkgst,bktd->bkgsd", probs.astype(q.dtype), v)
+    return out.reshape(b, h, s, hd)
+
+
+def decode_attention_ref(
+    q: jax.Array,
+    k_cache: jax.Array,
+    v_cache: jax.Array,
+    valid_len: jax.Array,
+) -> jax.Array:
+    """q: (B, H, hd); k/v_cache: (B, KV, S, hd); valid_len: (B,) → (B, H, hd)."""
+    b, h, hd = q.shape
+    kv, s = k_cache.shape[1], k_cache.shape[2]
+    qg = q.reshape(b, kv, h // kv, hd)
+    scores = jnp.einsum("bkgd,bktd->bkgt", qg, k_cache).astype(jnp.float32)
+    scores = scores / np.sqrt(hd)
+    valid = jnp.arange(s)[None] < valid_len[:, None]  # (B, S)
+    scores = jnp.where(valid[:, None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgt,bktd->bkgd", probs, v_cache)
+    return out.reshape(b, h, hd)
+
+
+def rmsnorm_ref(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    x32 = x.astype(jnp.float32)
+    y = x32 * jax.lax.rsqrt(jnp.mean(x32 * x32, axis=-1, keepdims=True) + eps)
+    return (y * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def moe_gating_ref(logits: jax.Array, top_k: int):
+    """logits: (T, E) → (gates (T,k) normalised, idx (T,k) int32)."""
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    gates, idx = jax.lax.top_k(probs, top_k)
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+    return gates, idx.astype(jnp.int32)

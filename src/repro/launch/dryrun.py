@@ -1,0 +1,460 @@
+"""Multi-pod dry-run: prove every (architecture × input shape × mesh)
+combination lowers, partitions and compiles, and extract the roofline
+inputs (FLOPs, bytes, collective traffic, per-device memory).
+
+MUST set the placeholder-device flag before ANY jax import (jax locks the
+device count at first init):
+"""
+
+import os
+
+if os.environ.get("REPRO_DRYRUN_DEVICES", "1") != "0":
+    os.environ["XLA_FLAGS"] = (
+        "--xla_force_host_platform_device_count=512 "
+        + os.environ.get("XLA_FLAGS", "")
+    )
+# (REPRO_DRYRUN_DEVICES=0 lets the test suite import the pure helpers in
+# this module without forcing 512 placeholder devices onto the process —
+# smoke tests must see 1 device.)
+
+# ruff: noqa: E402
+import argparse
+import dataclasses
+import json
+import re
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..configs import ARCHS, SHAPES, InputShape, for_shape, get_config
+from ..models import Model
+from ..models.config import ModelConfig
+from ..models.sharding import (
+    cache_specs,
+    input_batch_specs,
+    param_specs,
+    to_named,
+)
+from ..optim import AdamWConfig, adamw_init, adamw_update
+from .mesh import make_production_mesh
+
+ART_DIR = Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
+
+COLLECTIVE_RE = re.compile(
+    r"\b(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?(?:\.\d+)?\s*\(",
+)
+SHAPE_RE = re.compile(r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*\(?([a-z0-9]+)\[([\d,]*)\]")
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1,
+}
+
+
+def parse_collective_bytes(hlo_text: str) -> dict[str, float]:
+    """Sum result-shape bytes of every collective op in optimized HLO."""
+    out: dict[str, float] = {}
+    for line in hlo_text.splitlines():
+        m = COLLECTIVE_RE.search(line)
+        if not m:
+            continue
+        kind = m.group(1)
+        sm = SHAPE_RE.match(line)
+        if not sm:
+            continue
+        dt, dims = sm.group(1), sm.group(2)
+        nbytes = _DTYPE_BYTES.get(dt, 4)
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        out[kind] = out.get(kind, 0.0) + float(n * nbytes)
+    return out
+
+
+# --------------------------------------------------------------- inputs
+def input_specs(cfg: ModelConfig, shape: InputShape, model: Model) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input (no allocation)."""
+    b, s = shape.global_batch, shape.seq_len
+    f = jnp.float32
+    i = jnp.int32
+    front = cfg.n_frontend_tokens
+    sd = jax.ShapeDtypeStruct
+    if shape.kind in ("train", "prefill"):
+        batch: dict = {}
+        if cfg.frontend == "audio":
+            batch["frontend_embeds"] = sd((b, s, model.frontend_dim), f)
+        elif cfg.frontend == "vision":
+            batch["frontend_embeds"] = sd((b, front, model.frontend_dim), f)
+            batch["tokens"] = sd((b, s - front), i)
+        else:
+            batch["tokens"] = sd((b, s), i)
+        if shape.kind == "train":
+            batch["labels"] = sd((b, s), i)
+        return {"batch": batch}
+    # decode: one new token against a cache of seq_len
+    tok = (
+        sd((b, 1, model.frontend_dim), f)
+        if cfg.frontend == "audio"
+        else sd((b, 1), i)
+    )
+    cache = jax.eval_shape(
+        lambda: model.init_cache(b, cache_len=s, dtype=jnp.bfloat16)
+    )
+    return {"tokens": tok, "cache": cache, "pos": sd((), i)}
+
+
+# ------------------------------------------------------------ dry runs
+@dataclasses.dataclass
+class DryRunResult:
+    arch: str
+    shape: str
+    mesh: str
+    ok: bool
+    seconds: float
+    flops: float = 0.0
+    bytes_accessed: float = 0.0
+    collective_bytes: dict = dataclasses.field(default_factory=dict)
+    per_device_memory: dict = dataclasses.field(default_factory=dict)
+    error: str = ""
+    n_params: int = 0
+    # Scan-corrected totals (lax.scan bodies are counted once by
+    # cost_analysis; these add body × (L−1) derived from an L0-layer
+    # unrolled-vs-scanned compile pair — see run_with_correction).
+    flops_corrected: float = 0.0
+    bytes_corrected: float = 0.0
+    collective_corrected: dict = dataclasses.field(default_factory=dict)
+    n_layers: int = 0
+    scanned: bool = False
+
+    def row(self) -> str:
+        st = "OK " if self.ok else "FAIL"
+        return (
+            f"{self.arch:18s} {self.shape:12s} {self.mesh:10s} {st} "
+            f"{self.seconds:7.1f}s flops={self.flops:.3e} "
+            f"coll={sum(self.collective_bytes.values()):.3e}B"
+        )
+
+
+def _memory_analysis(compiled) -> dict:
+    try:
+        ma = compiled.memory_analysis()
+    except Exception:
+        return {}
+    out = {}
+    for k in (
+        "argument_size_in_bytes",
+        "output_size_in_bytes",
+        "temp_size_in_bytes",
+        "generated_code_size_in_bytes",
+        "peak_memory_in_bytes",
+    ):
+        v = getattr(ma, k, None)
+        if v is not None:
+            out[k] = int(v)
+    return out
+
+
+def _cost_analysis(compiled) -> tuple[float, float]:
+    try:
+        ca = compiled.cost_analysis()
+    except Exception:
+        return 0.0, 0.0
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    flops = float(ca.get("flops", 0.0))
+    nbytes = float(ca.get("bytes accessed", ca.get("bytes_accessed", 0.0)))
+    return flops, nbytes
+
+
+def run_one(
+    arch: str,
+    shape_name: str,
+    multi_pod: bool,
+    keep_hlo: bool = False,
+    save: bool = True,
+    unroll: bool = False,
+    cfg_override=None,
+    tag: str = "",
+    decode_cache_layout: str = "",
+    moe_ff_axis: str = "",
+    serve_params_bf16: bool = False,
+) -> DryRunResult:
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh_name = "x".join(str(s) for s in mesh.devices.shape)
+    cfg = for_shape(get_config(arch), shape)
+    if unroll:
+        cfg = dataclasses.replace(cfg, scan_layers=False)
+    if cfg_override:
+        cfg = dataclasses.replace(cfg, **cfg_override)
+    model = Model(cfg)
+    t0 = time.time()
+    res = DryRunResult(arch=arch, shape=shape_name, mesh=mesh_name, ok=False, seconds=0)
+    try:
+        params_shape = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+        if serve_params_bf16 and shape.kind != "train":
+            # Serving deployments store bf16 weights (halves the parameter
+            # stream per decode step; §Perf).
+            params_shape = jax.tree.map(
+                lambda l: jax.ShapeDtypeStruct(l.shape, jnp.bfloat16)
+                if l.dtype == jnp.float32
+                else l,
+                params_shape,
+            )
+        res.n_params = sum(
+            int(np.prod(l.shape)) for l in jax.tree.leaves(params_shape)
+        )
+        pspecs = param_specs(cfg, params_shape, mesh, moe_ff_axis=moe_ff_axis or None)
+        p_sh = to_named(mesh, pspecs)
+        ins = input_specs(cfg, shape, model)
+        import contextlib
+
+        # Active mesh context so P-only with_sharding_constraint inside
+        # blocks (fsdp_weight_gather) resolves during lowering.
+        mesh_ctx = jax.set_mesh(mesh)
+
+        if shape.kind == "train":
+            opt_cfg = AdamWConfig()
+            opt_shape = jax.eval_shape(adamw_init, params_shape)
+            opt_specs = {
+                "m": pspecs,
+                "v": pspecs,
+                "step": P(),
+            }
+            o_sh = to_named(mesh, opt_specs)
+            bspecs = input_batch_specs(
+                cfg, mesh, ins["batch"], shape.global_batch
+            )
+            b_sh = to_named(mesh, bspecs)
+
+            def train_step(params, opt_state, batch):
+                loss, grads = jax.value_and_grad(model.loss)(params, batch)
+                params, opt_state = adamw_update(opt_cfg, params, grads, opt_state)
+                return params, opt_state, loss
+
+            fn = jax.jit(
+                train_step,
+                in_shardings=(p_sh, o_sh, b_sh),
+                out_shardings=(p_sh, o_sh, NamedSharding(mesh, P())),
+                donate_argnums=(0, 1),
+            )
+            with mesh_ctx:
+                lowered = fn.lower(params_shape, opt_shape, ins["batch"])
+        elif shape.kind == "prefill":
+            bspecs = input_batch_specs(cfg, mesh, ins["batch"], shape.global_batch)
+            b_sh = to_named(mesh, bspecs)
+            out_sh = NamedSharding(
+                mesh, batch_logits_spec(cfg, mesh, shape.global_batch)
+            )
+
+            def prefill(params, batch):
+                logits, _ = model.prefill(params, batch, cache_len=shape.seq_len)
+                return logits
+
+            fn = jax.jit(prefill, in_shardings=(p_sh, b_sh), out_shardings=out_sh)
+            with mesh_ctx:
+                lowered = fn.lower(params_shape, ins["batch"])
+        else:  # decode
+            seq_shard = shape.name == "long_500k"
+            seq_axis = "data"
+            if decode_cache_layout == "seq_model":
+                seq_shard, seq_axis = True, "model"
+            elif decode_cache_layout == "seq_data":
+                seq_shard, seq_axis = True, "data"
+            elif decode_cache_layout == "batch":
+                seq_shard = False
+            cspecs = cache_specs(
+                cfg, mesh, ins["cache"], shape.global_batch, seq_shard, seq_axis
+            )
+            c_sh = to_named(mesh, cspecs)
+            tspec = input_batch_specs(
+                cfg, mesh, ins["tokens"], shape.global_batch
+            )
+            t_sh = to_named(mesh, tspec)
+            out_sh = NamedSharding(
+                mesh, batch_logits_spec(cfg, mesh, shape.global_batch)
+            )
+
+            def serve_step(params, tokens, cache, pos):
+                return model.decode_step(params, tokens, cache, pos)
+
+            fn = jax.jit(
+                serve_step,
+                in_shardings=(p_sh, t_sh, c_sh, NamedSharding(mesh, P())),
+                out_shardings=(out_sh, c_sh),
+                donate_argnums=(2,),
+            )
+            with mesh_ctx:
+                lowered = fn.lower(
+                    params_shape, ins["tokens"], ins["cache"], ins["pos"]
+                )
+
+        compiled = lowered.compile()
+        res.flops, res.bytes_accessed = _cost_analysis(compiled)
+        res.per_device_memory = _memory_analysis(compiled)
+        hlo = compiled.as_text()
+        res.collective_bytes = parse_collective_bytes(hlo)
+        if keep_hlo:
+            (ART_DIR / f"{arch}_{shape_name}_{mesh_name}.hlo").write_text(hlo)
+        res.ok = True
+    except Exception:
+        res.error = traceback.format_exc()[-4000:]
+    res.seconds = time.time() - t0
+    if save:
+        ART_DIR.mkdir(parents=True, exist_ok=True)
+        out = dataclasses.asdict(res)
+        stem = f"{arch}_{shape_name}_{mesh_name}" + (f"_{tag}" if tag else "")
+        (ART_DIR / f"{stem}.json").write_text(json.dumps(out, indent=2))
+    return res
+
+
+def batch_logits_spec(cfg: ModelConfig, mesh, global_batch: int) -> P:
+    from ..models.sharding import _div, batch_spec
+
+    lead = batch_spec(cfg, mesh, global_batch, 1)[0]
+    return P(lead, None, _div(cfg.vocab_size, mesh, "model"))
+
+
+def run_with_correction(
+    arch: str,
+    shape_name: str,
+    multi_pod: bool,
+    l0: int = 3,
+    keep_hlo: bool = False,
+    save: bool = True,
+    tag: str = "",
+    **kw,
+) -> DryRunResult:
+    """Full dry-run + scan-FLOP correction.
+
+    1. Compile the full model with scanned layers (fast; proves lowering,
+       sharding and memory at the real layer count).
+    2. Compile an L0-layer variant twice — unrolled and scanned.  The
+       difference isolates the exact per-layer HLO cost (validated: for
+       olmo-1b, nonlayer+body×L matches the fully-unrolled compile).
+    3. corrected = full + body × (L − 1).
+    """
+    full = run_one(arch, shape_name, multi_pod, keep_hlo=keep_hlo, save=False, **kw)
+    cfg = for_shape(get_config(arch), SHAPES[shape_name])
+    full.n_layers = cfg.n_layers
+    # scan *unit*: xlstm scans over groups of `slstm_every` blocks
+    unit = 1
+    if cfg.block_pattern == "xlstm":
+        unit = cfg.slstm_every if cfg.n_layers % cfg.slstm_every == 0 else 0
+    full.scanned = cfg.scan_layers and unit != 0
+    n_units = cfg.n_layers // max(unit, 1)
+    if not full.ok or not full.scanned or n_units < 2:
+        full.flops_corrected = full.flops
+        full.bytes_corrected = full.bytes_accessed
+        full.collective_corrected = dict(full.collective_bytes)
+        _save(full, save, tag)
+        return full
+
+    l0_units = min(l0, n_units)
+    if unit > 1:
+        # xlstm groups are 8 blocks each — 2 units is already a 16-block
+        # unrolled compile; keep the correction pair affordable.
+        l0_units = min(l0_units, 2)
+    l0_layers = l0_units * unit
+    small_override = dict(kw.pop("cfg_override", None) or {})
+    small_override["n_layers"] = l0_layers
+    small_scan = run_one(
+        arch, shape_name, multi_pod, save=False, cfg_override=small_override, **kw
+    )
+    small_unroll = run_one(
+        arch,
+        shape_name,
+        multi_pod,
+        save=False,
+        unroll=True,
+        cfg_override=small_override,
+        **kw,
+    )
+    if small_scan.ok and small_unroll.ok and l0_units > 1:
+        per_unit_flops = (small_unroll.flops - small_scan.flops) / (l0_units - 1)
+        per_unit_bytes = (
+            small_unroll.bytes_accessed - small_scan.bytes_accessed
+        ) / (l0_units - 1)
+        full.flops_corrected = full.flops + per_unit_flops * (n_units - 1)
+        full.bytes_corrected = full.bytes_accessed + per_unit_bytes * (n_units - 1)
+        coll = dict(full.collective_bytes)
+        for k in set(small_unroll.collective_bytes) | set(small_scan.collective_bytes):
+            d = (
+                small_unroll.collective_bytes.get(k, 0.0)
+                - small_scan.collective_bytes.get(k, 0.0)
+            ) / (l0_units - 1)
+            coll[k] = coll.get(k, 0.0) + d * (n_units - 1)
+        full.collective_corrected = coll
+        full.seconds += small_scan.seconds + small_unroll.seconds
+    else:
+        full.flops_corrected = full.flops
+        full.bytes_corrected = full.bytes_accessed
+        full.collective_corrected = dict(full.collective_bytes)
+    _save(full, save, tag)
+    return full
+
+
+def _save(res: DryRunResult, save: bool, tag: str = "") -> None:
+    if not save:
+        return
+    ART_DIR.mkdir(parents=True, exist_ok=True)
+    stem = f"{res.arch}_{res.shape}_{res.mesh}" + (f"_{tag}" if tag else "")
+    (ART_DIR / f"{stem}.json").write_text(
+        json.dumps(dataclasses.asdict(res), indent=2)
+    )
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default="all", help="arch id or 'all'")
+    ap.add_argument("--shape", default="all", help="shape id or 'all'")
+    ap.add_argument(
+        "--mesh", default="both", choices=["single", "multi", "both"]
+    )
+    ap.add_argument("--keep-hlo", action="store_true")
+    ap.add_argument(
+        "--fast", action="store_true", help="skip the scan-FLOP correction compiles"
+    )
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    archs = [a for a in ARCHS if a != "orloj_gpt"] if args.arch == "all" else [
+        args.arch.replace("-", "_")
+    ]
+    shapes = list(SHAPES) if args.shape == "all" else [args.shape]
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    results = []
+    for arch in archs:
+        for shape in shapes:
+            for multi in meshes:
+                if args.skip_existing:
+                    mesh_name = "2x16x16" if multi else "16x16"
+                    p = ART_DIR / f"{arch}_{shape}_{mesh_name}.json"
+                    if p.exists() and json.loads(p.read_text()).get("ok"):
+                        print(f"skip {arch} {shape} {mesh_name} (cached)", flush=True)
+                        continue
+                if args.fast:
+                    r = run_one(arch, shape, multi, keep_hlo=args.keep_hlo)
+                else:
+                    r = run_with_correction(arch, shape, multi, keep_hlo=args.keep_hlo)
+                print(r.row(), flush=True)
+                if not r.ok:
+                    print(r.error, flush=True)
+                results.append(r)
+    n_ok = sum(r.ok for r in results)
+    print(f"\n{n_ok}/{len(results)} dry-runs OK")
+    if n_ok != len(results):
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,98 @@
+"""Training driver: ``python -m repro.launch.train --arch olmo_1b --steps 50``.
+
+On this CPU container it trains the *reduced* variant by default (the full
+configs are exercised via the dry-run); pass ``--full`` on real hardware.
+Composes the whole substrate: config → model → sharded data pipeline →
+AdamW → checkpointing.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..checkpoint import latest_step, restore_checkpoint, save_checkpoint
+from ..configs import get_config
+from ..data import DataConfig, make_train_iterator
+from ..models import Model
+from ..models.sharding import input_batch_specs, param_specs, to_named
+from ..optim import AdamWConfig, adamw_init, adamw_update
+from .mesh import make_debug_mesh
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="orloj_gpt")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--full", action="store_true", help="full (non-reduced) config")
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if not args.full:
+        cfg = cfg.reduced(vocab_size=min(cfg.vocab_size, 8192))
+    if cfg.frontend:
+        raise SystemExit(
+            f"{args.arch} needs frontend embeddings; use the dry-run or serve driver"
+        )
+    model = Model(cfg)
+    mesh = make_debug_mesh()
+    print(f"arch={cfg.name} params≈{cfg.n_params_estimate/1e6:.1f}M mesh={dict(mesh.shape)}")
+
+    params = model.init(jax.random.PRNGKey(0))
+    opt_cfg = AdamWConfig(lr=args.lr, total_steps=args.steps, warmup_steps=max(args.steps // 10, 1))
+    opt_state = adamw_init(params)
+
+    pspecs = to_named(mesh, param_specs(cfg, jax.eval_shape(lambda: params), mesh))
+    params = jax.tree.map(jax.device_put, params, pspecs)
+
+    data_cfg = DataConfig(
+        vocab_size=cfg.vocab_size, seq_len=args.seq, batch_size=args.batch
+    )
+    it = make_train_iterator(data_cfg, mesh)
+
+    @jax.jit
+    def train_step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(model.loss)(params, batch)
+        params, opt_state = adamw_update(opt_cfg, params, grads, opt_state)
+        return params, opt_state, loss
+
+    start = 0
+    if args.ckpt_dir:
+        got = latest_step(args.ckpt_dir)
+        if got is not None:
+            params = restore_checkpoint(args.ckpt_dir, got, jax.eval_shape(lambda: params))
+            start = got
+            print(f"restored step {got}")
+
+    losses = []
+    t0 = time.time()
+    for step in range(start, args.steps):
+        batch = next(it)
+        params, opt_state, loss = train_step(params, opt_state, batch)
+        losses.append(float(loss))
+        if (step + 1) % args.log_every == 0:
+            dt = (time.time() - t0) / args.log_every
+            print(f"step {step+1:5d} loss {np.mean(losses[-args.log_every:]):.4f} {dt*1e3:.0f} ms/step")
+            t0 = time.time()
+        if args.ckpt_dir and (step + 1) % 100 == 0:
+            save_checkpoint(args.ckpt_dir, step + 1, params)
+
+    if args.ckpt_dir:
+        save_checkpoint(args.ckpt_dir, args.steps, params)
+    first = np.mean(losses[: max(len(losses) // 5, 1)])
+    last = np.mean(losses[-max(len(losses) // 5, 1) :])
+    print(f"loss {first:.4f} → {last:.4f} ({'improved' if last < first else 'NOT improved'})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,10 @@
+"""Composable JAX model substrate: the worker-side "data plane" of the
+ORLOJ serving framework.  Dense / MoE / SSM / hybrid decoder architectures
+with GQA attention, RoPE, sliding windows, expert routing and recurrent
+state — all as pure-functional JAX with explicit parameter pytrees, ready
+for pjit sharding (see repro.models.sharding and repro.launch)."""
+
+from .config import ModelConfig
+from .model import Model
+
+__all__ = ["ModelConfig", "Model"]

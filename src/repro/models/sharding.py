@@ -1,0 +1,246 @@
+"""Sharding rules: parameter / input / cache PartitionSpecs per arch.
+
+Mesh axes: ``("data", "model")`` single pod, ``("pod", "data", "model")``
+multi-pod.  ``pod`` composes with ``data`` as the outer data-parallel axis.
+
+Strategy (see DESIGN.md §5):
+- tensor parallel over ``model``: attention heads, FFN hidden, vocab,
+  experts (MoE), SSM inner channels;
+- batch over (pod, data); FSDP over ``data`` for ≥8B-parameter models
+  (parameters *and* optimizer state);
+- ``long_500k`` decode: KV-cache *sequence* axis over ``data`` —
+  flash-decoding-style partial softmax, GSPMD inserts the combine;
+- axes that do not divide the mesh axis (e.g. MQA's single KV head, xLSTM's
+  4 heads) are replicated / sharded on an inner dim instead.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from .config import ModelConfig
+
+FSDP_THRESHOLD = 8_000_000_000  # params; above this, shard params over data
+
+
+def _axsize(mesh: Mesh, name: str) -> int:
+    return mesh.shape.get(name, 1)
+
+
+def _div(dim: int, mesh: Mesh, axis: str) -> str | None:
+    """Return the mesh axis if the dim is divisible by it, else None."""
+    n = _axsize(mesh, axis)
+    return axis if (n > 1 and dim % n == 0) else None
+
+
+def dp_axes(mesh: Mesh) -> tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.shape)
+
+
+def use_fsdp(cfg: ModelConfig) -> bool:
+    return cfg.n_params_estimate >= FSDP_THRESHOLD
+
+
+def _fsdp_axis(cfg: ModelConfig, mesh: Mesh, dim: int) -> str | None:
+    if not use_fsdp(cfg):
+        return None
+    return _div(dim, mesh, "data")
+
+
+def param_specs(
+    cfg: ModelConfig,
+    params_shape: Any,
+    mesh: Mesh,
+    moe_ff_axis: str | None = None,
+) -> Any:
+    """PartitionSpec pytree matching ``jax.eval_shape(model.init, ...)``.
+
+    ``moe_ff_axis``: serving-time 2-D expert sharding — experts over
+    ``model`` *and* the expert FFN hidden dim over this axis (usually
+    ``data``, idle at inference).  The w_down contraction then produces one
+    small reduce per layer instead of FSDP-gathering every expert weight
+    per decode step (§Perf pair 3)."""
+
+    def rule(path, leaf) -> P:
+        keys = [
+            k.key if hasattr(k, "key") else str(k) for k in path
+        ]
+        name = keys[-1]
+        shape = leaf.shape
+        scanned = cfg.scan_layers and "blocks" in keys
+        core = shape[1:] if scanned else shape
+        spec = _leaf_rule(name, keys, core, cfg, mesh, moe_ff_axis)
+        if scanned:
+            spec = P(None, *spec)
+        return spec
+
+    return jax.tree_util.tree_map_with_path(rule, params_shape)
+
+
+def _leaf_rule(
+    name, keys, shape, cfg: ModelConfig, mesh: Mesh, moe_ff_axis: str | None = None
+) -> P:
+    f = lambda dim: _fsdp_axis(cfg, mesh, dim)
+    d = cfg.d_model
+    if name == "table":  # embedding (V, d)
+        return P(_div(shape[0], mesh, "model"), f(shape[1]))
+    if name == "lm_head":  # (d, V)
+        return P(f(shape[0]), _div(shape[1], mesh, "model"))
+    if name == "frontend_proj":
+        return P(None, f(shape[1]))
+    if name in ("wq", "wk", "wv") and len(shape) == 3:  # (d, H, hd)
+        h_ax = _div(shape[1], mesh, "model")
+        if h_ax:
+            return P(f(shape[0]), h_ax, None)
+        return P(f(shape[0]), None, _div(shape[2], mesh, "model"))
+    if name == "wo" and len(shape) == 3:  # (H, hd, d)
+        h_ax = _div(shape[0], mesh, "model")
+        if h_ax:
+            return P(h_ax, None, f(shape[2]))
+        return P(None, _div(shape[1], mesh, "model"), f(shape[2]))
+    if name in ("w_gate", "w_up") and len(shape) == 2:  # mlp (d, ff)
+        return P(f(shape[0]), _div(shape[1], mesh, "model"))
+    if name == "w_down" and len(shape) == 2:  # (ff, d)
+        return P(_div(shape[0], mesh, "model"), f(shape[1]))
+    if name == "router":  # (d, E)
+        return P(None, None)
+    if name in ("w_gate", "w_up") and len(shape) == 3:  # moe (E, d, ff)
+        e_ax = _div(shape[0], mesh, "model")
+        if moe_ff_axis:
+            return P(e_ax, None, _div(shape[2], mesh, moe_ff_axis))
+        if e_ax:
+            return P(e_ax, f(shape[1]), None)
+        return P(None, f(shape[1]), _div(shape[2], mesh, "model"))
+    if name == "w_down" and len(shape) == 3:  # moe (E, ff, d)
+        e_ax = _div(shape[0], mesh, "model")
+        if moe_ff_axis:
+            return P(e_ax, _div(shape[1], mesh, moe_ff_axis), None)
+        if e_ax:
+            return P(e_ax, None, f(shape[2]))
+        return P(None, _div(shape[1], mesh, "model"), f(shape[2]))
+    # --- mamba ---
+    if name in ("in_x", "in_z", "w_o"):  # (d, d_inner)
+        return P(f(shape[0]), _div(shape[1], mesh, "model"))
+    if name == "out" and len(shape) == 2:  # (d_inner, d)
+        return P(_div(shape[0], mesh, "model"), f(shape[1]))
+    if name == "conv":  # (w, d_inner)
+        return P(None, _div(shape[1], mesh, "model"))
+    if name in ("w_b", "w_c", "w_dt_lo"):  # (d_inner, N/r)
+        return P(_div(shape[0], mesh, "model"), None)
+    if name == "w_dt_hi":  # (r, d_inner)
+        return P(None, _div(shape[1], mesh, "model"))
+    if name in ("dt_bias", "d_skip"):  # (d_inner,)
+        return P(_div(shape[0], mesh, "model"))
+    if name == "a_log":  # (d_inner, N)
+        return P(_div(shape[0], mesh, "model"), None)
+    # --- mlstm / slstm ---
+    if name in ("w_i", "w_f"):  # (d, H)
+        return P(f(shape[0]), None)
+    if name == "w_in" and len(shape) == 3:  # slstm (d, 4, d)
+        return P(f(shape[0]), None, _div(shape[2], mesh, "model"))
+    if name == "r" and len(shape) == 4:  # slstm (4, H, hd, hd)
+        return P(None, None, None, _div(shape[3], mesh, "model"))
+    # norms, biases, scalars → replicated
+    return P(*([None] * len(shape)))
+
+
+# ----------------------------------------------------------- activations
+def batch_spec(cfg: ModelConfig, mesh: Mesh, global_batch: int, ndim: int) -> P:
+    axes = dp_axes(mesh)
+    n = int(np.prod([_axsize(mesh, a) for a in axes])) or 1
+    lead = axes if (axes and global_batch % n == 0) else ()
+    lead_spec = lead if len(lead) != 1 else lead[0]
+    return P(lead_spec if lead else None, *([None] * (ndim - 1)))
+
+
+def input_batch_specs(
+    cfg: ModelConfig, mesh: Mesh, batch_tree: Any, global_batch: int
+) -> Any:
+    return jax.tree.map(
+        lambda leaf: batch_spec(cfg, mesh, global_batch, leaf.ndim), batch_tree
+    )
+
+
+def cache_specs(
+    cfg: ModelConfig,
+    mesh: Mesh,
+    cache_tree: Any,
+    global_batch: int,
+    seq_shard: bool,
+    seq_axis: str = "data",
+) -> Any:
+    """Sharding for the decode cache.
+
+    ``seq_shard=True``: KV cache *length* over ``seq_axis`` —
+    sequence-parallel flash decoding (partial softmax combined by GSPMD).
+    Default layout: batch over (pod, data), KV heads over ``model`` where
+    divisible (non-divisible GQA head counts replicate — see the §Perf log
+    for why seq-sharding beats that for small-KV archs).
+    """
+    scanned = cfg.scan_layers
+
+    def rule(path, leaf) -> NamedSharding:
+        keys = [k.key if hasattr(k, "key") else str(k) for k in path]
+        name = keys[-1]
+        shape = leaf.shape[1:] if scanned else leaf.shape
+        if name in ("k", "v"):  # (B, S, KV, hd)
+            if seq_shard:
+                batch_ax = (
+                    batch_spec(cfg, mesh, global_batch, 1)[0]
+                    if seq_axis == "model"
+                    else None
+                )
+                spec = P(batch_ax, _div(shape[1], mesh, seq_axis), None, None)
+            else:
+                spec = batch_spec(cfg, mesh, global_batch, 4)
+                kv_ax = _div(shape[2], mesh, "model")
+                spec = P(spec[0], None, kv_ax, None)
+        elif name == "h" and len(shape) == 3:  # mamba (B, d_inner, N)
+            spec = P(
+                None if seq_shard else batch_spec(cfg, mesh, global_batch, 1)[0],
+                _div(shape[1], mesh, "model"),
+                None,
+            )
+        elif name == "conv" and len(shape) == 3:  # (B, w-1, d_inner)
+            spec = P(
+                None if seq_shard else batch_spec(cfg, mesh, global_batch, 1)[0],
+                None,
+                _div(shape[2], mesh, "model"),
+            )
+        elif name == "c" and len(shape) == 4:  # mlstm (B, H, hd, hd)
+            spec = P(
+                None if seq_shard else batch_spec(cfg, mesh, global_batch, 1)[0],
+                None,
+                None,
+                _div(shape[3], mesh, "model"),
+            )
+        elif name == "n" and len(shape) == 3:  # mlstm (B, H, hd)
+            spec = P(
+                None if seq_shard else batch_spec(cfg, mesh, global_batch, 1)[0],
+                None,
+                _div(shape[2], mesh, "model"),
+            )
+        elif len(shape) == 2:  # slstm h/c/n (B, d)
+            spec = P(
+                None if seq_shard else batch_spec(cfg, mesh, global_batch, 1)[0],
+                _div(shape[1], mesh, "model"),
+            )
+        else:
+            spec = P(*([None] * len(shape)))
+        if scanned:
+            spec = P(None, *spec)
+        return spec
+
+    return jax.tree_util.tree_map_with_path(rule, cache_tree)
+
+
+def to_named(mesh: Mesh, spec_tree: Any) -> Any:
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        spec_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )

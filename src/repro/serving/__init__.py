@@ -1,0 +1,2 @@
+"""Serving substrate: workloads, traces, batching and the real-execution
+engine that couples the ORLOJ scheduler to JAX model execution."""

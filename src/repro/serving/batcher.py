@@ -1,0 +1,45 @@
+"""Padded-batch construction for the real-execution engine.
+
+TPU/XLA serve static shapes: sequence lengths are bucketed (multiples of a
+bucket size, one compiled program per bucket) and the batch is padded to
+``bucket(max_r len_r)`` — the concrete mechanism behind the paper's Eq. 4
+(`l = max_r l_r`) on an XLA backend.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from ..core.request import Request
+
+__all__ = ["PaddedBatch", "make_padded_batch", "bucket_for"]
+
+
+def bucket_for(length: int, buckets: tuple[int, ...]) -> int:
+    for b in buckets:
+        if length <= b:
+            return b
+    return buckets[-1]
+
+
+@dataclasses.dataclass
+class PaddedBatch:
+    tokens: np.ndarray  # (k, bucket) int32, zero-padded
+    lengths: np.ndarray  # (k,) int32
+    labels_bucket: int
+    requests: list[Request]
+
+
+def make_padded_batch(
+    requests: list[Request], buckets: tuple[int, ...], pad_id: int = 0
+) -> PaddedBatch:
+    """Pad each request's token payload to the bucket of the batch max."""
+    lengths = np.array([len(r.payload) for r in requests], np.int32)
+    bucket = bucket_for(int(lengths.max()), buckets)
+    tokens = np.full((len(requests), bucket), pad_id, np.int32)
+    for i, r in enumerate(requests):
+        tokens[i, : lengths[i]] = np.asarray(r.payload, np.int32)[:bucket]
+    lengths = np.minimum(lengths, bucket)
+    return PaddedBatch(tokens, lengths, bucket, requests)

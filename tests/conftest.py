@@ -1,0 +1,6 @@
+import os
+
+# The dry-run launcher forces 512 placeholder devices when imported as a
+# program; tests import its pure helpers and must keep the real 1-device
+# CPU backend (see src/repro/launch/dryrun.py header).
+os.environ.setdefault("REPRO_DRYRUN_DEVICES", "0")

@@ -1,0 +1,60 @@
+"""Tests for multi-replica scale-out (§3.1)."""
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    BatchLatencyModel,
+    ClockworkScheduler,
+    ModelExecutor,
+    OrlojScheduler,
+    simulate,
+)
+from repro.serving.cluster import simulate_cluster
+from repro.serving.trace import TraceConfig, generate_requests
+from repro.serving.workload import bimodal
+
+LM = BatchLatencyModel(c0=25.0, c1=1.0)
+
+
+def _rs(util, n=600, seed=5):
+    return generate_requests(
+        bimodal(1.0), LM, slo_scale=3.0,
+        cfg=TraceConfig(n_requests=n, seed=seed, utilization=util),
+    )
+
+
+@pytest.mark.parametrize("policy", ["least_loaded", "round_robin", "jsq_work"])
+def test_cluster_conservation(policy):
+    rs = _rs(util=1.5)  # offered at ~1.5× one worker → needs the pool
+    scheds = [OrlojScheduler(LM, initial_dists=rs.initial_dists()) for _ in range(3)]
+    res = simulate_cluster(rs.fresh(), scheds, ModelExecutor(LM), policy=policy)
+    assert res.n_total == 600
+    assert (
+        res.n_finished_ok + res.n_finished_late + res.n_dropped + res.n_unserved
+        == res.n_total
+    )
+    assert res.finish_rate > 0.5, policy
+
+
+def test_more_replicas_help_under_overload():
+    rs = _rs(util=2.2)
+    one = simulate(
+        rs.fresh(),
+        OrlojScheduler(LM, initial_dists=rs.initial_dists()),
+        ModelExecutor(LM),
+    ).finish_rate
+    four = simulate_cluster(
+        rs.fresh(),
+        [OrlojScheduler(LM, initial_dists=rs.initial_dists()) for _ in range(4)],
+        ModelExecutor(LM),
+    ).finish_rate
+    assert four > one + 0.15
+
+
+def test_cluster_works_with_baseline_schedulers():
+    rs = _rs(util=1.5)
+    warm = np.concatenate(list(rs.app_history.values()))
+    scheds = [ClockworkScheduler(LM, init_samples=warm) for _ in range(2)]
+    res = simulate_cluster(rs.fresh(), scheds, ModelExecutor(LM))
+    assert res.finish_rate > 0.3

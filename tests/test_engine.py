@@ -1,0 +1,59 @@
+"""End-to-end test of the real-execution serving engine (tiny model)."""
+
+import numpy as np
+import pytest
+
+from repro.core import EmpiricalDistribution, OrlojScheduler, SchedulerConfig
+from repro.models.config import ModelConfig
+from repro.serving.engine import EngineConfig, ServingEngine
+
+TINY = ModelConfig(
+    name="tiny",
+    arch_type="dense",
+    n_layers=2,
+    d_model=64,
+    n_heads=4,
+    n_kv_heads=2,
+    d_ff=128,
+    vocab_size=256,
+    dtype="float32",
+    scan_layers=False,
+)
+
+
+@pytest.fixture(scope="module")
+def engine():
+    return ServingEngine(
+        TINY, EngineConfig(buckets=(16, 32), batch_sizes=(1, 2, 4), profile_reps=2)
+    )
+
+
+def test_profile_fits_eq3(engine):
+    lm = engine.profile_latency_model()
+    assert lm.c0 >= 0 and lm.c1 > 0
+    # bigger work → bigger predicted latency
+    assert lm.batch_time([32.0] * 4) > lm.batch_time([16.0])
+
+
+def test_serve_real_requests_end_to_end(engine):
+    lm = engine.profile_latency_model()
+    reqs, hist = engine.make_requests(
+        30,
+        lm,
+        length_sampler=lambda rng: int(rng.integers(4, 32)),
+        slo_scale=50.0,  # generous: CPU timing jitter is large
+        utilization=0.3,
+        seed=1,
+    )
+    dists = {
+        a: EmpiricalDistribution.from_samples(x)
+        for a, x in hist.items()
+        if len(x) >= 2
+    }
+    sched = OrlojScheduler(
+        lm, cfg=SchedulerConfig(batch_sizes=(1, 2, 4)), initial_dists=dists
+    )
+    res = engine.serve(reqs, sched)
+    assert res.n_total == 30
+    assert res.n_finished_ok + res.n_finished_late + res.n_dropped == 30
+    assert res.finish_rate > 0.5

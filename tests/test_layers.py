@@ -1,0 +1,44 @@
+"""Layer-level equivalence tests."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.layers import attention_apply, init_attention, norm_apply, init_norm
+
+
+@pytest.mark.parametrize("h,kv", [(8, 2), (4, 4), (6, 1)])
+def test_repeat_kv_equals_grouped_gqa(h, kv):
+    """The §Perf repeat-KV formulation is numerically identical to the
+    baseline grouped formulation."""
+    rng = jax.random.PRNGKey(0)
+    d, hd = 64, 16
+    params = init_attention(rng, d, h, kv, hd)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 24, d), jnp.float32)
+    base = attention_apply(params, x, n_kv=kv, rope_theta=1e4)
+    rep = attention_apply(params, x, n_kv=kv, rope_theta=1e4, repeat_kv=True)
+    np.testing.assert_allclose(np.asarray(base), np.asarray(rep), rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("window", [4, 16])
+def test_repeat_kv_sliding_window(window):
+    rng = jax.random.PRNGKey(2)
+    params = init_attention(rng, 32, 4, 2, 8)
+    x = jax.random.normal(jax.random.PRNGKey(3), (1, 32, 32), jnp.float32)
+    base = attention_apply(
+        params, x, n_kv=2, rope_theta=1e4, sliding_window=window
+    )
+    rep = attention_apply(
+        params, x, n_kv=2, rope_theta=1e4, sliding_window=window, repeat_kv=True
+    )
+    np.testing.assert_allclose(np.asarray(base), np.asarray(rep), rtol=2e-5, atol=2e-5)
+
+
+def test_nonparam_ln_has_no_params():
+    p = init_norm(jax.random.PRNGKey(0), 16, "nonparam_ln")
+    assert p == {}
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, 16)) * 7 + 3
+    y = norm_apply(p, x, "nonparam_ln")
+    np.testing.assert_allclose(np.asarray(y.mean(-1)), 0.0, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(y.std(-1)), 1.0, atol=1e-2)

@@ -1,0 +1,91 @@
+"""Sharding/lowering tests on an 8-device debug mesh (subprocess so the
+placeholder-device XLA flag never leaks into other tests)."""
+
+import json
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+import pytest
+
+SRC = str(Path(__file__).resolve().parent.parent / "src")
+
+SCRIPT = textwrap.dedent(
+    """
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import json, sys
+    import jax, jax.numpy as jnp
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.configs import get_config, for_shape, InputShape
+    from repro.models import Model
+    from repro.models.sharding import (
+        param_specs, input_batch_specs, cache_specs, to_named)
+
+    arch, kind = sys.argv[1], sys.argv[2]
+    cfg = get_config(arch).reduced()
+    mesh = jax.make_mesh((2, 4), ("data", "model"))
+    model = Model(cfg)
+    params_shape = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    pspecs = to_named(mesh, param_specs(cfg, params_shape, mesh))
+
+    b, s = 4, 64
+    if kind == "train":
+        batch = {}
+        if cfg.frontend == "audio":
+            batch["frontend_embeds"] = jax.ShapeDtypeStruct((b, s, model.frontend_dim), jnp.float32)
+        elif cfg.frontend == "vision":
+            f = cfg.n_frontend_tokens
+            batch["frontend_embeds"] = jax.ShapeDtypeStruct((b, f, model.frontend_dim), jnp.float32)
+            batch["tokens"] = jax.ShapeDtypeStruct((b, s - f), jnp.int32)
+        else:
+            batch["tokens"] = jax.ShapeDtypeStruct((b, s), jnp.int32)
+        batch["labels"] = jax.ShapeDtypeStruct((b, s), jnp.int32)
+        bspecs = to_named(mesh, input_batch_specs(cfg, mesh, batch, b))
+        fn = jax.jit(model.loss, in_shardings=(pspecs, bspecs),
+                     out_shardings=NamedSharding(mesh, P()))
+        compiled = fn.lower(params_shape, batch).compile()
+    else:
+        tok = (jax.ShapeDtypeStruct((b, 1, model.frontend_dim), jnp.float32)
+               if cfg.frontend == "audio" else jax.ShapeDtypeStruct((b, 1), jnp.int32))
+        cache = jax.eval_shape(lambda: model.init_cache(b, cache_len=s, dtype=jnp.bfloat16))
+        cspecs = to_named(mesh, cache_specs(cfg, mesh, cache, b, kind == "seqshard"))
+        tspec = to_named(mesh, input_batch_specs(cfg, mesh, tok, b))
+        fn = jax.jit(model.decode_step,
+                     in_shardings=(pspecs, tspec, cspecs, NamedSharding(mesh, P())),
+                     out_shardings=(NamedSharding(mesh, P()), cspecs))
+        compiled = fn.lower(params_shape, tok, cache,
+                            jax.ShapeDtypeStruct((), jnp.int32)).compile()
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    print(json.dumps({"flops": float(ca.get("flops", 0))}))
+    """
+)
+
+
+def _run(arch: str, kind: str):
+    out = subprocess.run(
+        [sys.executable, "-c", SCRIPT, arch, kind],
+        capture_output=True,
+        text=True,
+        env={"PYTHONPATH": SRC, "PATH": "/usr/bin:/bin"},
+        timeout=600,
+    )
+    assert out.returncode == 0, out.stderr[-3000:]
+    return json.loads(out.stdout.strip().splitlines()[-1])
+
+
+@pytest.mark.parametrize(
+    "arch", ["glm4_9b", "dbrx_132b", "hymba_1_5b", "xlstm_1_3b", "internvl2_1b"]
+)
+def test_train_lowering_on_mesh(arch):
+    got = _run(arch, "train")
+    assert got["flops"] > 0
+
+
+@pytest.mark.parametrize("arch", ["glm4_9b", "arctic_480b", "musicgen_large"])
+def test_decode_lowering_on_mesh(arch):
+    got = _run(arch, "decode")
+    assert got["flops"] > 0

@@ -1,0 +1,126 @@
+"""Tests for optimizer, data pipeline, checkpointing and the MoE dispatch."""
+
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.data import DataConfig, SyntheticCorpus
+from repro.checkpoint import latest_step, restore_checkpoint, save_checkpoint
+from repro.models import moe as moe_lib
+from repro.optim import AdamWConfig, adamw_init, adamw_update, cosine_schedule
+
+
+# ---------------------------------------------------------------- optim
+def test_adamw_reduces_quadratic_loss():
+    params = {"w": jnp.array([3.0, -2.0, 1.5])}
+    cfg = AdamWConfig(lr=0.1, weight_decay=0.0, warmup_steps=0, total_steps=200)
+    state = adamw_init(params)
+
+    def loss(p):
+        return jnp.sum(jnp.square(p["w"]))
+
+    for _ in range(100):
+        g = jax.grad(loss)(params)
+        params, state = adamw_update(cfg, params, g, state)
+    assert float(loss(params)) < 1e-2
+
+
+def test_adamw_clips_gradients():
+    params = {"w": jnp.zeros(4)}
+    cfg = AdamWConfig(lr=1e-3, clip_norm=1.0)
+    state = adamw_init(params)
+    g = {"w": jnp.full((4,), 1e6)}
+    p2, state = adamw_update(cfg, params, g, state)
+    assert np.all(np.isfinite(np.asarray(p2["w"])))
+
+
+def test_cosine_schedule_shape():
+    cfg = AdamWConfig(lr=1.0, warmup_steps=10, total_steps=100)
+    assert float(cosine_schedule(cfg, jnp.int32(0))) == 0.0
+    assert float(cosine_schedule(cfg, jnp.int32(10))) == pytest.approx(1.0)
+    assert float(cosine_schedule(cfg, jnp.int32(100))) == pytest.approx(0.0, abs=1e-6)
+
+
+# ----------------------------------------------------------------- data
+def test_corpus_shapes_and_determinism():
+    cfg = DataConfig(vocab_size=100, seq_len=16, batch_size=3, seed=5)
+    b1 = SyntheticCorpus(cfg).batch()
+    b2 = SyntheticCorpus(cfg).batch()
+    assert b1["tokens"].shape == (3, 16)
+    assert b1["labels"].shape == (3, 16)
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])  # same seed
+    # labels are tokens shifted by one
+    row = SyntheticCorpus(cfg)
+    full = row.sample_row()
+    assert full.shape == (17,)
+
+
+# ----------------------------------------------------------- checkpoint
+def test_checkpoint_roundtrip():
+    tree = {
+        "a": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+        "b": {"c": jnp.ones((4,), jnp.int32)},
+    }
+    with tempfile.TemporaryDirectory() as d:
+        save_checkpoint(d, 7, tree)
+        assert latest_step(d) == 7
+        like = jax.eval_shape(lambda: tree)
+        got = restore_checkpoint(d, 7, like)
+        np.testing.assert_array_equal(np.asarray(got["a"]), np.asarray(tree["a"]))
+        np.testing.assert_array_equal(
+            np.asarray(got["b"]["c"]), np.asarray(tree["b"]["c"])
+        )
+
+
+def test_checkpoint_shape_mismatch_raises():
+    tree = {"a": jnp.zeros((2, 2))}
+    with tempfile.TemporaryDirectory() as d:
+        save_checkpoint(d, 1, tree)
+        bad = {"a": jax.ShapeDtypeStruct((3, 3), jnp.float32)}
+        with pytest.raises(ValueError):
+            restore_checkpoint(d, 1, bad)
+
+
+# ------------------------------------------------------------------ moe
+@pytest.mark.parametrize("e,k", [(4, 2), (8, 2), (4, 1)])
+def test_moe_dispatch_matches_dense_oracle(e, k):
+    rng = jax.random.PRNGKey(0)
+    d, ff = 32, 64
+    params = moe_lib.init_moe(rng, d, ff, e)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, d), jnp.float32)
+    # generous capacity → no drops → must match the dense oracle exactly
+    y, aux = moe_lib.moe_apply(params, x, top_k=k, capacity_factor=8.0)
+    want = moe_lib.moe_ref(params, x, top_k=k)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(want), rtol=2e-4, atol=2e-4)
+    assert float(aux) > 0.0
+
+
+def test_moe_capacity_drops_tokens():
+    """With capacity factor ≪ 1, most tokens are dropped (zero output) but
+    nothing breaks and outputs stay finite."""
+    rng = jax.random.PRNGKey(0)
+    params = moe_lib.init_moe(rng, 16, 32, 4)
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 64, 16), jnp.float32)
+    y, _ = moe_lib.moe_apply(params, x, top_k=2, capacity_factor=0.1)
+    assert bool(jnp.isfinite(y).all())
+    dense = moe_lib.moe_ref(params, x, top_k=2)
+    # some tokens lose both expert slots → exactly zero rows
+    row_zero = np.asarray(jnp.all(y == 0, axis=-1))[0]
+    assert row_zero.sum() > 0
+    # overall mass is reduced vs. the no-drop oracle (tokens were dropped;
+    # partially-dropped tokens keep only one expert's contribution)
+    assert float(jnp.abs(y).mean()) < float(jnp.abs(dense).mean())
+
+
+def test_moe_load_balance_loss_uniform_router():
+    """A uniform router gives aux ≈ 1 (the Switch loss optimum)."""
+    rng = jax.random.PRNGKey(0)
+    params = moe_lib.init_moe(rng, 16, 32, 4)
+    params = dict(params)
+    params["router"] = jnp.zeros_like(params["router"])
+    x = jax.random.normal(jax.random.PRNGKey(2), (1, 256, 16))
+    _, aux = moe_lib.moe_apply(params, x, top_k=1)
+    assert 0.9 < float(aux) < 1.1

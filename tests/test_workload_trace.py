@@ -1,0 +1,90 @@
+"""Tests for the §5.2 workload/trace generation."""
+
+import numpy as np
+import pytest
+
+from repro.core.distributions import BatchLatencyModel
+from repro.serving.trace import TraceConfig, azure_like_arrivals, generate_requests
+from repro.serving.workload import (
+    REAL_TASKS,
+    bimodal,
+    k_modal,
+    lognormal_from_mean_p99,
+    real_task,
+    static,
+    unequal_bimodal,
+)
+
+LM = BatchLatencyModel(c0=25.0, c1=1.0)
+
+
+def test_bimodal_two_apps_two_modes():
+    apps = bimodal(1.0)
+    assert len(apps) == 2
+    rng = np.random.default_rng(0)
+    s0, s1 = apps[0].sample(rng, 4000), apps[1].sample(rng, 4000)
+    assert abs(s0.mean() - 60.0) < 3
+    assert abs(s1.mean() - 200.0) < 3
+
+
+def test_unequal_weights():
+    short = unequal_bimodal("short")
+    assert short[0].weight > short[1].weight
+    long = unequal_bimodal("long")
+    assert long[0].weight < long[1].weight
+
+
+@pytest.mark.parametrize("k", [1, 3, 8])
+def test_k_modal_count(k):
+    assert len(k_modal(k)) == k
+
+
+def test_lognormal_fit_matches_published_stats():
+    for name, (mean, p99) in list(REAL_TASKS.items())[:4]:
+        f = lognormal_from_mean_p99(mean, p99)
+        xs = f(np.random.default_rng(0), 200_000)
+        assert abs(xs.mean() - mean) / mean < 0.05, name
+        # p99 within 25% (lognormal fit of two moments)
+        assert abs(np.quantile(xs, 0.99) - p99) / p99 < 0.3, name
+
+
+def test_real_task_mixture():
+    apps = real_task("bart-cnn")
+    assert len(apps) == 2
+
+
+def test_generate_requests_slo_and_replay():
+    rs = generate_requests(
+        bimodal(1.0), LM, slo_scale=3.0, cfg=TraceConfig(n_requests=400, seed=9)
+    )
+    assert len(rs.requests) == 400
+    # SLO = 3 × P99(alone)
+    assert rs.requests[0].slo == pytest.approx(3.0 * rs.p99_alone)
+    # releases sorted and non-negative
+    rel = [r.release for r in rs.requests]
+    assert min(rel) >= 0
+    # replay: fresh() preserves everything except bookkeeping
+    a, b = rs.fresh(), rs.fresh()
+    assert [r.true_time for r in a] == [r.true_time for r in b]
+    assert [r.release for r in a] == [r.release for r in b]
+    a[0].finished = 1.0
+    assert rs.requests[0].finished is None  # no aliasing
+
+
+def test_utilization_scales_arrival_rate():
+    lo = generate_requests(
+        bimodal(1.0), LM, cfg=TraceConfig(n_requests=400, seed=1, utilization=0.4)
+    )
+    hi = generate_requests(
+        bimodal(1.0), LM, cfg=TraceConfig(n_requests=400, seed=1, utilization=1.2)
+    )
+    span = lambda rs: rs.requests[-1].release - rs.requests[0].release
+    assert span(lo) > 2.0 * span(hi)
+
+
+def test_azure_like_arrivals_sorted_within_bucket():
+    cfg = TraceConfig()
+    rng = np.random.default_rng(2)
+    ts = azure_like_arrivals(0.01, 500, cfg, rng)
+    assert ts.shape == (500,)
+    assert np.all(np.diff(ts) >= 0)
