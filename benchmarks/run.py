@@ -26,6 +26,7 @@ def main() -> None:
     benches = {
         "ablation": ablation.ablation,
         "cluster": cluster_scale.cluster_scale,
+        "cluster_hetero": cluster_scale.cluster_hetero,
         "table2": tables.table2_bimodal_std,
         "table3": tables.table3_modality,
         "fig9": tables.fig9_unequal_peaks,

@@ -11,8 +11,12 @@ from repro.core import (
     BinScoreModel,
     EmpiricalDistribution,
     HullQueue,
+    ModelExecutor,
+    OrlojScheduler,
     Request,
+    Worker,
     hetero_max,
+    run_event_loop,
 )
 
 
@@ -46,6 +50,36 @@ def main() -> None:
     x = np.exp(model.b * 300.0)
     top, val = q.argmax(x)
     print(f"\nat t=300 the hull queue selects r{top+1} (score {val:.3f})")
+
+    # The same machinery end-to-end: the scores above drive Algorithm 1
+    # inside the unified event engine — one worker, then a two-replica pool
+    # on the identical trace (§3.1 scale-out, same substrate).
+    lm2 = BatchLatencyModel(c0=5.0, c1=1.0)
+    rng = np.random.default_rng(0)
+    dists = {"a": d1, "b": d2}
+    trace = [
+        Request(
+            app_id="a" if i % 2 == 0 else "b",
+            release=float(i * 40.0),
+            slo=600.0,
+            true_time=float((d1 if i % 2 == 0 else d2).sample(rng, 1)[0]),
+        )
+        for i in range(40)
+    ]
+
+    def replica():
+        return Worker(OrlojScheduler(lm2, initial_dists=dists), ModelExecutor(lm2))
+
+    def clone():
+        return [
+            Request(app_id=r.app_id, release=r.release, slo=r.slo, true_time=r.true_time)
+            for r in trace
+        ]
+
+    one = run_event_loop(clone(), [replica()])
+    two = run_event_loop(clone(), [replica(), replica()], policy="p2c")
+    print(f"\nevent loop, 1 worker : {one.summary()}")
+    print(f"event loop, 2 workers: {two.summary()} (p2c dispatch)")
 
 
 if __name__ == "__main__":

@@ -10,7 +10,8 @@ The paper's primary contribution (Yu et al., 2022) as a composable library:
 - :mod:`repro.core.scheduler` — Algorithm 1.
 - :mod:`repro.core.baselines` — Clockwork/Nexus/Clipper/EDF-style baselines.
 - :mod:`repro.core.profiler` — the long-term feedback loop (§3.2).
-- :mod:`repro.core.simulator` — the discrete-event evaluation harness (§5).
+- :mod:`repro.core.eventloop` — the unified multi-worker discrete-event
+  engine (§5 evaluation harness = 1 worker; §3.1 replica pools = N workers).
 """
 
 from .baselines import (
@@ -32,7 +33,14 @@ from .priority import DEFAULT_B, BinScoreModel, Score
 from .profiler import OnlineProfiler, ProfilerConfig
 from .request import PiecewiseStepCost, Request, StepCost
 from .scheduler import Batch, OrlojScheduler, SchedulerConfig
-from .simulator import ModelExecutor, SimResult, simulate
+from .eventloop import (
+    DISPATCH_POLICIES,
+    ModelExecutor,
+    SimResult,
+    Worker,
+    run_event_loop,
+    simulate,
+)
 
 __all__ = [
     "BatchLatencyModel",
@@ -57,7 +65,10 @@ __all__ = [
     "ClockworkScheduler",
     "EDFScheduler",
     "NexusScheduler",
+    "DISPATCH_POLICIES",
     "ModelExecutor",
     "SimResult",
+    "Worker",
+    "run_event_loop",
     "simulate",
 ]

@@ -1,0 +1,435 @@
+"""Unified multi-worker discrete-event engine (paper §5 methodology, §3.1
+scale-out).
+
+One event loop drives both the single-worker evaluation harness (§5: one
+non-preemptive worker executing one batch at a time, ground-truth batch
+latency ``l_B = c0 + c1·k·max_r l_r`` per Eq. 3–4) and the replica-pool
+setting (§3.1: "different models and their replicas can use ORLOJ in
+parallel").  The 1-worker case *is* the classic ``simulate`` loop; the
+N-worker case adds a front-end dispatch policy that assigns each arriving
+request to a replica scheduler.
+
+Design points, each of which previously existed in only one of the two
+diverged copies of this loop:
+
+- **per-worker wake dedup** — a scheduler that returns a wake-up time gets
+  at most one *live* ``WAKE`` event per worker: a wake is pushed only when
+  it is earlier than the worker's pending wake (a superseded later wake
+  lingers in the heap as a no-op until it fires, so the bound is amortized,
+  not hard: arrivals + in-flight batches + live wakes + not-yet-fired
+  superseded wakes).  The pre-unification cluster loop pushed a wake on
+  *every* idle dispatch attempt and flooded the heap under light load;
+- **scheduler-overhead charging** — optionally bill the measured wall-clock
+  cost of each scheduling decision to the virtual clock (the Fig.-14
+  overhead study);
+- **horizon** — stop observing at a fixed virtual time: the reported
+  makespan is clamped to the horizon, busy time is credited only inside
+  the window, and the rest of the trace (including any in-flight batch)
+  counts as unserved;
+- **heterogeneous replicas** — each :class:`Worker` pairs its own scheduler
+  with its own executor, so a pool can mix fast and slow replicas or
+  different :class:`~repro.core.distributions.BatchLatencyModel` s;
+- **honest accounting** — :class:`SimResult` carries an explicit
+  ``n_workers`` and per-pool ``utilization = worker_busy / (makespan ·
+  n_workers)`` instead of corrupting ``makespan`` to fake it.
+
+Front-end dispatch policies (pluggable via :data:`DISPATCH_POLICIES` or any
+callable ``(request, now, pool) -> worker_index``):
+
+- ``round_robin`` — baseline;
+- ``least_loaded`` — fewest pending requests, ties broken randomly (the
+  standard full-information serving-tier balancer);
+- ``jsq_work`` — least *expected work* queued (Σ per-request E[alone]),
+  distribution-aware: reuses the same per-app means ORLOJ tracks;
+- ``p2c`` — power-of-two-choices: sample two replicas, send to the one
+  with less expected queued work.  Distribution-aware like ``jsq_work``
+  but needs only two load probes per arrival, the classic trade-off for
+  front-ends that cannot snapshot every replica.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import itertools
+import time as _time
+from typing import Callable, Protocol, Sequence
+
+import numpy as np
+
+from .distributions import BatchLatencyModel
+from .request import Request
+from .scheduler import Batch
+
+__all__ = [
+    "DISPATCH_POLICIES",
+    "Executor",
+    "ModelExecutor",
+    "SimResult",
+    "Worker",
+    "run_event_loop",
+    "simulate",
+]
+
+
+class Executor(Protocol):
+    def __call__(self, batch: Batch, now: float) -> float:
+        """Return the batch execution time in ms."""
+
+
+@dataclasses.dataclass
+class ModelExecutor:
+    """Ground-truth execution following the paper's padding model."""
+
+    latency_model: BatchLatencyModel
+    jitter: float = 0.0  # multiplicative noise std (hardware non-determinism)
+    seed: int = 0
+
+    def __post_init__(self) -> None:
+        self._rng = np.random.default_rng(self.seed)
+
+    def __call__(self, batch: Batch, now: float) -> float:
+        t = self.latency_model.batch_time([r.true_time for r in batch.requests])
+        if self.jitter > 0:
+            t *= float(np.exp(self._rng.normal(0.0, self.jitter)))
+        return t
+
+
+@dataclasses.dataclass
+class SimResult:
+    n_total: int
+    n_finished_ok: int
+    n_finished_late: int
+    n_dropped: int
+    n_unserved: int
+    worker_busy: float  # summed busy time across the pool
+    makespan: float  # virtual time of the last processed event
+    latencies: np.ndarray
+    n_workers: int = 1
+    peak_heap_size: int = 0  # high-water mark of the event heap
+
+    @property
+    def finish_rate(self) -> float:
+        return self.n_finished_ok / max(1, self.n_total)
+
+    @property
+    def utilization(self) -> float:
+        """Pool utilization: busy time over total worker-time available."""
+        return self.worker_busy / max(self.makespan * self.n_workers, 1e-9)
+
+    def summary(self) -> str:
+        return (
+            f"finish_rate={self.finish_rate:.3f} ok={self.n_finished_ok} "
+            f"late={self.n_finished_late} dropped={self.n_dropped} "
+            f"unserved={self.n_unserved} util={self.utilization:.2f}"
+        )
+
+
+@dataclasses.dataclass
+class Worker:
+    """One replica: its scheduler plus the executor that runs its batches.
+
+    Executors may be shared between workers (homogeneous pool, one measured
+    backend) or distinct (heterogeneous pool of fast/slow replicas)."""
+
+    scheduler: object
+    executor: Executor
+
+
+def _expected_alone(scheduler, req: Request) -> float:
+    """E[alone] of ``req`` under the scheduler's learned app distribution
+    (falls back to its scalar estimator, then to a unit cost)."""
+    dists = getattr(scheduler, "_app_dists", None)
+    if dists and req.app_id in dists:
+        return float(dists[req.app_id].mean())
+    est = getattr(scheduler, "est", None)
+    if est is not None:
+        return float(est.value())
+    return 1.0
+
+
+class _Pool:
+    """Dispatch-time view of the pool handed to policy callables.
+
+    ``queued_work`` is an incremental ledger of per-request charges
+    (E[alone] under the scheduler's app distribution *at arrival time*).
+    Each charge is recorded per rid and the **same recorded value** is
+    subtracted when the request leaves — never re-evaluated, since the
+    scheduler may swap in a new profiler snapshot in between and a
+    re-evaluated decrement would make the ledger drift (even negative).
+    Requests the scheduler drops are swept from the ledger lazily after
+    each scheduling decision.
+
+    The ledger is maintained only when ``track_work`` — i.e. when the
+    dispatch policy actually reads ``queued_work`` (``jsq_work``, ``p2c``,
+    or any user callable); count-based policies and 1-worker runs skip the
+    bookkeeping entirely."""
+
+    __slots__ = ("workers", "busy", "queued_work", "rng", "track_work",
+                 "_charges", "_swept_timeouts")
+
+    def __init__(
+        self,
+        workers: Sequence[Worker],
+        rng: np.random.Generator,
+        track_work: bool = True,
+    ):
+        self.workers = list(workers)
+        self.busy = [False] * len(self.workers)
+        self.queued_work = [0.0] * len(self.workers)
+        self.rng = rng
+        self.track_work = track_work
+        # per-worker rid -> (request, charged amount)
+        self._charges: list[dict[int, tuple[Request, float]]] = [
+            {} for _ in self.workers
+        ]
+        # per-worker scheduler timeout count at the last sweep
+        self._swept_timeouts = [0] * len(self.workers)
+
+    def __len__(self) -> int:
+        return len(self.workers)
+
+    def charge(self, w: int, req: Request) -> None:
+        if not self.track_work:
+            return
+        amount = _expected_alone(self.workers[w].scheduler, req)
+        self._charges[w][req.rid] = (req, amount)
+        self.queued_work[w] += amount
+
+    def discharge(self, w: int, rid: int) -> None:
+        if not self.track_work:
+            return
+        got = self._charges[w].pop(rid, None)
+        if got is not None:
+            self.queued_work[w] -= got[1]
+
+    def sweep_dropped(self, w: int) -> None:
+        """Remove charges for requests the scheduler timed out (they will
+        never be dispatched, so nothing else would ever discharge them).
+        Scans only when the scheduler's timeout counter moved since the
+        last sweep (schedulers without a counter are always scanned)."""
+        if not self.track_work:
+            return
+        n_timed_out = getattr(self.workers[w].scheduler, "n_timed_out", None)
+        if n_timed_out is not None:
+            if n_timed_out == self._swept_timeouts[w]:
+                return
+            self._swept_timeouts[w] = n_timed_out
+        ch = self._charges[w]
+        stale = [rid for rid, (req, _) in ch.items() if req.dropped is not None]
+        for rid in stale:
+            self.queued_work[w] -= ch.pop(rid)[1]
+
+    def backlog(self, w: int) -> tuple[float, float]:
+        """(expected queued work, queue length) — the policy sort key."""
+        sched = self.workers[w].scheduler
+        return (
+            self.queued_work[w],
+            getattr(sched, "n_pending", 0) + self.busy[w],
+        )
+
+
+def _round_robin(workers: Sequence[Worker], rng: np.random.Generator):
+    it = itertools.cycle(range(len(workers)))
+    return lambda req, now, pool: next(it)
+
+
+def _least_loaded(workers: Sequence[Worker], rng: np.random.Generator):
+    def pick(req: Request, now: float, pool: _Pool) -> int:
+        loads = np.array(
+            [
+                getattr(w.scheduler, "n_pending", 0) + pool.busy[i]
+                for i, w in enumerate(pool.workers)
+            ]
+        )
+        cands = np.flatnonzero(loads == loads.min())
+        return int(rng.choice(cands))
+
+    return pick
+
+
+def _jsq_work(workers: Sequence[Worker], rng: np.random.Generator):
+    return lambda req, now, pool: int(np.argmin(pool.queued_work))
+
+
+def _p2c(workers: Sequence[Worker], rng: np.random.Generator):
+    n = len(workers)
+
+    def pick(req: Request, now: float, pool: _Pool) -> int:
+        if n == 1:
+            return 0
+        i, j = rng.choice(n, size=2, replace=False)
+        return int(i) if pool.backlog(int(i)) <= pool.backlog(int(j)) else int(j)
+
+    return pick
+
+
+# name -> factory(workers, rng) -> pick(request, now, pool) -> worker index
+DISPATCH_POLICIES: dict[str, Callable] = {
+    "round_robin": _round_robin,
+    "least_loaded": _least_loaded,
+    "jsq_work": _jsq_work,
+    "p2c": _p2c,
+}
+
+_ARRIVAL, _DONE, _WAKE = 0, 1, 2
+
+
+def run_event_loop(
+    requests: Sequence[Request],
+    workers: Sequence[Worker],
+    *,
+    policy: str | Callable = "least_loaded",
+    horizon: float | None = None,
+    charge_scheduler_overhead: bool = False,
+    seed: int = 0,
+) -> SimResult:
+    """Drive ``workers`` replica schedulers against one arrival stream.
+
+    Runs until every request is resolved (finished/dropped) or, with
+    ``horizon``, until the virtual clock passes it.  ``policy`` is a name
+    from :data:`DISPATCH_POLICIES` or a callable
+    ``(request, now, pool) -> worker_index``.
+
+    ``charge_scheduler_overhead=True`` bills the *measured wall-clock* cost
+    of each scheduler decision to the virtual clock (used by the Fig.-14
+    overhead study: with ms-scale requests, scheduling time itself starts
+    to matter).
+    """
+    workers = list(workers)
+    if not workers:
+        raise ValueError("need at least one worker")
+    n = len(workers)
+    rng = np.random.default_rng(seed)
+    # Only work-aware policies read queued_work; 1-worker runs and
+    # count-based policies skip the ledger bookkeeping entirely.
+    track_work = n > 1 and (callable(policy) or policy in ("jsq_work", "p2c"))
+    pool = _Pool(workers, rng, track_work=track_work)
+    if callable(policy):
+        pick = policy
+    else:
+        try:
+            pick = DISPATCH_POLICIES[policy](workers, rng)
+        except KeyError:
+            raise ValueError(
+                f"unknown dispatch policy {policy!r}; "
+                f"known: {sorted(DISPATCH_POLICIES)}"
+            ) from None
+
+    requests = sorted(requests, key=lambda r: r.release)
+    events: list[tuple[float, int, int, object]] = []
+    seq = itertools.count()
+    for r in requests:
+        heapq.heappush(events, (r.release, next(seq), _ARRIVAL, r))
+
+    peak_heap = len(events)
+    worker_busy_time = 0.0
+    last_time = 0.0
+    inflight: list[tuple[float, float] | None] = [None] * n  # (start, end)
+    # At most one *live* WAKE per worker (re-armed only for an earlier
+    # wake): the dedup that keeps the heap from flooding under light load.
+    pending_wake: list[float | None] = [None] * n
+
+    def try_dispatch(w: int, now: float) -> None:
+        nonlocal worker_busy_time, peak_heap
+        if pool.busy[w]:
+            return
+        worker = workers[w]
+        t0 = _time.perf_counter()
+        batch, wake = worker.scheduler.next_batch(now)
+        overhead = (
+            (_time.perf_counter() - t0) * 1e3 if charge_scheduler_overhead else 0.0
+        )
+        if batch is not None:
+            start = now + overhead
+            dur = worker.executor(batch, start)
+            for r in batch.requests:
+                r.started = start
+                pool.discharge(w, r.rid)
+            pool.busy[w] = True
+            worker_busy_time += dur
+            inflight[w] = (start, start + dur)
+            heapq.heappush(events, (start + dur, next(seq), _DONE, (w, batch)))
+            peak_heap = max(peak_heap, len(events))
+        elif wake is not None and np.isfinite(wake) and wake > now:
+            if pending_wake[w] is None or wake < pending_wake[w]:
+                pending_wake[w] = wake
+                heapq.heappush(events, (wake, next(seq), _WAKE, w))
+                peak_heap = max(peak_heap, len(events))
+        # the decision may have timed requests out (drop phase) — keep the
+        # policy load signal honest
+        pool.sweep_dropped(w)
+
+    while events:
+        now, _, kind, payload = heapq.heappop(events)
+        if horizon is not None and now > horizon:
+            # Stop observing at the horizon: the clock reads ``horizon``
+            # (not the time of the first event beyond it) and busy time is
+            # only credited for work inside the window — an in-flight
+            # batch's requests stay unserved, so crediting its full
+            # duration would overstate utilization.
+            last_time = horizon
+            for span in inflight:
+                if span is not None and span[1] > horizon:
+                    worker_busy_time -= span[1] - max(span[0], horizon)
+            break
+        last_time = now
+        if kind == _ARRIVAL:
+            req: Request = payload
+            w = pick(req, now, pool) if n > 1 else 0
+            pool.charge(w, req)
+            workers[w].scheduler.on_arrival(req, now)
+            try_dispatch(w, now)
+        elif kind == _DONE:
+            w, batch = payload
+            pool.busy[w] = False
+            inflight[w] = None
+            for r in batch.requests:
+                r.finished = now
+            workers[w].scheduler.on_batch_done(
+                batch, now, [r.true_time for r in batch.requests]
+            )
+            try_dispatch(w, now)
+        else:  # _WAKE
+            w = payload
+            if pending_wake[w] is not None and now >= pending_wake[w]:
+                pending_wake[w] = None
+            try_dispatch(w, now)
+
+    ok = sum(1 for r in requests if r.ok)
+    late = sum(1 for r in requests if r.finished is not None and not r.ok)
+    dropped = sum(1 for r in requests if r.dropped is not None)
+    unserved = sum(1 for r in requests if r.finished is None and r.dropped is None)
+    lat = np.array(
+        [r.finished - r.release for r in requests if r.finished is not None]
+    )
+    return SimResult(
+        n_total=len(requests),
+        n_finished_ok=ok,
+        n_finished_late=late,
+        n_dropped=dropped,
+        n_unserved=unserved,
+        worker_busy=worker_busy_time,
+        makespan=last_time,
+        latencies=lat,
+        n_workers=n,
+        peak_heap_size=peak_heap,
+    )
+
+
+def simulate(
+    requests: Sequence[Request],
+    scheduler,
+    executor: Executor,
+    horizon: float | None = None,
+    charge_scheduler_overhead: bool = False,
+) -> SimResult:
+    """The single-worker evaluation harness (§5) — the 1-worker case of
+    :func:`run_event_loop`, kept as the stable entry point."""
+    return run_event_loop(
+        requests,
+        [Worker(scheduler, executor)],
+        policy="round_robin",
+        horizon=horizon,
+        charge_scheduler_overhead=charge_scheduler_overhead,
+    )

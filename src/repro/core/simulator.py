@@ -1,166 +1,15 @@
-"""Discrete-event serving simulator (paper §5 methodology).
+"""Discrete-event serving simulator (paper §5 methodology) — compatibility
+surface.
 
-Drives any scheduler with the simulator interface against an open-loop
-arrival trace.  The worker executes one batch at a time, non-preemptively
-(§3.1); the ground-truth batch execution time follows the padding model
-``l_B = c0 + c1·k·max_r l_r`` (Eq. 3–4) via a pluggable *executor* so the
-same loop can drive either modelled execution (for the paper's evaluation)
-or real JAX execution (``repro.serving.engine``).
+The actual loop lives in :mod:`repro.core.eventloop`, the unified
+multi-worker engine; :func:`simulate` is its 1-worker case.  This module
+keeps the historical import path (``repro.core.simulator``) stable for
+callers and re-exports the executor/result types that used to be defined
+here.
 """
 
 from __future__ import annotations
 
-import dataclasses
-import heapq
-import itertools
-from typing import Callable, Protocol, Sequence
-
-import numpy as np
-
-from .distributions import BatchLatencyModel
-from .request import Request
-from .scheduler import Batch
+from .eventloop import Executor, ModelExecutor, SimResult, simulate
 
 __all__ = ["Executor", "ModelExecutor", "SimResult", "simulate"]
-
-
-class Executor(Protocol):
-    def __call__(self, batch: Batch, now: float) -> float:
-        """Return the batch execution time in ms."""
-
-
-@dataclasses.dataclass
-class ModelExecutor:
-    """Ground-truth execution following the paper's padding model."""
-
-    latency_model: BatchLatencyModel
-    jitter: float = 0.0  # multiplicative noise std (hardware non-determinism)
-    seed: int = 0
-
-    def __post_init__(self) -> None:
-        self._rng = np.random.default_rng(self.seed)
-
-    def __call__(self, batch: Batch, now: float) -> float:
-        t = self.latency_model.batch_time([r.true_time for r in batch.requests])
-        if self.jitter > 0:
-            t *= float(np.exp(self._rng.normal(0.0, self.jitter)))
-        return t
-
-
-@dataclasses.dataclass
-class SimResult:
-    n_total: int
-    n_finished_ok: int
-    n_finished_late: int
-    n_dropped: int
-    n_unserved: int
-    worker_busy: float
-    makespan: float
-    latencies: np.ndarray
-
-    @property
-    def finish_rate(self) -> float:
-        return self.n_finished_ok / max(1, self.n_total)
-
-    @property
-    def utilization(self) -> float:
-        return self.worker_busy / max(self.makespan, 1e-9)
-
-    def summary(self) -> str:
-        return (
-            f"finish_rate={self.finish_rate:.3f} ok={self.n_finished_ok} "
-            f"late={self.n_finished_late} dropped={self.n_dropped} "
-            f"unserved={self.n_unserved} util={self.utilization:.2f}"
-        )
-
-
-_ARRIVAL, _DONE, _WAKE = 0, 1, 2
-
-
-def simulate(
-    requests: Sequence[Request],
-    scheduler,
-    executor: Executor,
-    horizon: float | None = None,
-    charge_scheduler_overhead: bool = False,
-) -> SimResult:
-    """Run the event loop until all requests are resolved (or ``horizon``).
-
-    ``charge_scheduler_overhead=True`` bills the *measured wall-clock* cost
-    of each scheduler decision to the virtual clock (used by the Fig.-14
-    overhead study: with ms-scale requests, scheduling time itself starts
-    to matter)."""
-    import time as _time
-
-    requests = sorted(requests, key=lambda r: r.release)
-    events: list[tuple[float, int, int, object]] = []
-    seq = itertools.count()
-    for r in requests:
-        heapq.heappush(events, (r.release, next(seq), _ARRIVAL, r))
-
-    busy = False
-    worker_busy_time = 0.0
-    last_time = 0.0
-    pending_wake: float | None = None
-
-    def try_dispatch(now: float) -> None:
-        nonlocal busy, worker_busy_time, pending_wake
-        if busy:
-            return
-        t0 = _time.perf_counter()
-        batch, wake = scheduler.next_batch(now)
-        overhead = (
-            (_time.perf_counter() - t0) * 1e3 if charge_scheduler_overhead else 0.0
-        )
-        if batch is not None:
-            start = now + overhead
-            dur = executor(batch, start)
-            for r in batch.requests:
-                r.started = start
-            busy = True
-            worker_busy_time += dur
-            heapq.heappush(events, (start + dur, next(seq), _DONE, batch))
-        elif wake is not None and np.isfinite(wake) and wake > now:
-            if pending_wake is None or wake < pending_wake:
-                pending_wake = wake
-                heapq.heappush(events, (wake, next(seq), _WAKE, None))
-
-    while events:
-        now, _, kind, payload = heapq.heappop(events)
-        last_time = now
-        if horizon is not None and now > horizon:
-            break
-        if kind == _ARRIVAL:
-            scheduler.on_arrival(payload, now)
-            try_dispatch(now)
-        elif kind == _DONE:
-            busy = False
-            batch: Batch = payload
-            for r in batch.requests:
-                r.finished = now
-            scheduler.on_batch_done(batch, now, [r.true_time for r in batch.requests])
-            try_dispatch(now)
-        else:  # _WAKE
-            if pending_wake is not None and now >= pending_wake:
-                pending_wake = None
-            try_dispatch(now)
-
-    ok = sum(1 for r in requests if r.ok)
-    late = sum(1 for r in requests if r.finished is not None and not r.ok)
-    dropped = sum(1 for r in requests if r.dropped is not None)
-    unserved = sum(
-        1 for r in requests if r.finished is None and r.dropped is None
-    )
-    lat = np.array(
-        [r.finished - r.release for r in requests if r.finished is not None]
-    )
-    return SimResult(
-        n_total=len(requests),
-        n_finished_ok=ok,
-        n_finished_late=late,
-        n_dropped=dropped,
-        n_unserved=unserved,
-        worker_busy=worker_busy_time,
-        makespan=last_time,
-        latencies=lat,
-    )

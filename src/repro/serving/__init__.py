@@ -1,2 +1,7 @@
-"""Serving substrate: workloads, traces, batching and the real-execution
-engine that couples the ORLOJ scheduler to JAX model execution."""
+"""Serving substrate: workloads, traces, batching, replica-pool dispatch
+and the real-execution engine that couples the ORLOJ scheduler to JAX
+model execution."""
+
+from .cluster import simulate_cluster
+
+__all__ = ["simulate_cluster"]

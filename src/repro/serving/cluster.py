@@ -1,130 +1,50 @@
 """Multi-worker scale-out (paper §3.1: "to scale out to a pool of workers
 in a cluster setting, different models and their replicas can use ORLOJ in
-parallel").
+parallel") — compatibility surface.
 
-Each replica runs its own ORLOJ (or baseline) scheduler instance; a
-front-end load balancer assigns arriving requests to replicas.  Policies:
+The replica-pool loop is the N-worker case of the unified engine in
+:mod:`repro.core.eventloop`; :func:`simulate_cluster` keeps the historical
+call shape (a list of schedulers sharing one executor).  For heterogeneous
+pools — per-replica executors, different latency models — build
+:class:`~repro.core.eventloop.Worker` pairs and call
+:func:`~repro.core.eventloop.run_event_loop` directly.
 
-- ``least_loaded`` — fewest pending requests (power-of-two-choices style
-  with full information, the standard serving-tier balancer);
-- ``round_robin`` — baseline;
-- ``jsq_work`` — least *expected work* queued (Σ per-request E[alone]),
-  distribution-aware: uses the same per-app means ORLOJ tracks, so the
-  balancer benefits from the paper's profiling substrate too.
-
-The cluster simulator composes the single-worker event loop: one shared
-arrival stream, one worker busy-state per replica, non-preemptive batches.
+Dispatch policies (see :data:`repro.core.eventloop.DISPATCH_POLICIES`):
+``least_loaded``, ``round_robin``, ``jsq_work``, ``p2c``.
 """
 
 from __future__ import annotations
 
-import heapq
-import itertools
 from typing import Callable, Sequence
 
-import numpy as np
-
+from ..core.eventloop import (
+    DISPATCH_POLICIES,
+    Executor,
+    SimResult,
+    Worker,
+    run_event_loop,
+)
 from ..core.request import Request
-from ..core.simulator import Executor, SimResult
-from ..core.scheduler import Batch
 
-__all__ = ["simulate_cluster"]
-
-
-def _expected_alone(scheduler, req: Request) -> float:
-    dists = getattr(scheduler, "_app_dists", None)
-    if dists and req.app_id in dists:
-        return float(dists[req.app_id].mean())
-    est = getattr(scheduler, "est", None)
-    if est is not None:
-        return float(est.value())
-    return 1.0
+__all__ = ["DISPATCH_POLICIES", "Worker", "run_event_loop", "simulate_cluster"]
 
 
 def simulate_cluster(
     requests: Sequence[Request],
     schedulers: Sequence,
     executor: Executor,
-    policy: str = "least_loaded",
+    policy: str | Callable = "least_loaded",
     seed: int = 0,
+    horizon: float | None = None,
+    charge_scheduler_overhead: bool = False,
 ) -> SimResult:
-    """Drive N replica schedulers against one arrival stream."""
-    n = len(schedulers)
-    rng = np.random.default_rng(seed)
-    requests = sorted(requests, key=lambda r: r.release)
-    events: list[tuple[float, int, int, object]] = []
-    seq = itertools.count()
-    ARRIVAL, DONE, WAKE = 0, 1, 2
-    for r in requests:
-        heapq.heappush(events, (r.release, next(seq), ARRIVAL, r))
-
-    busy = [False] * n
-    queued_work = [0.0] * n
-    rr = itertools.cycle(range(n))
-    worker_busy_time = 0.0
-    last_time = 0.0
-
-    def pick(req: Request) -> int:
-        if policy == "round_robin":
-            return next(rr)
-        if policy == "jsq_work":
-            return int(np.argmin(queued_work))
-        # least_loaded (ties broken randomly)
-        loads = np.array([s.n_pending + busy[i] for i, s in enumerate(schedulers)])
-        cands = np.flatnonzero(loads == loads.min())
-        return int(rng.choice(cands))
-
-    def try_dispatch(w: int, now: float) -> None:
-        nonlocal worker_busy_time
-        if busy[w]:
-            return
-        batch, wake = schedulers[w].next_batch(now)
-        if batch is not None:
-            dur = executor(batch, now)
-            for r in batch.requests:
-                r.started = now
-                queued_work[w] -= _expected_alone(schedulers[w], r)
-            busy[w] = True
-            worker_busy_time += dur
-            heapq.heappush(events, (now + dur, next(seq), DONE, (w, batch)))
-        elif wake is not None and np.isfinite(wake) and wake > now:
-            heapq.heappush(events, (wake, next(seq), WAKE, w))
-
-    while events:
-        now, _, kind, payload = heapq.heappop(events)
-        last_time = now
-        if kind == ARRIVAL:
-            req: Request = payload
-            w = pick(req)
-            queued_work[w] += _expected_alone(schedulers[w], req)
-            schedulers[w].on_arrival(req, now)
-            try_dispatch(w, now)
-        elif kind == DONE:
-            w, batch = payload
-            busy[w] = False
-            for r in batch.requests:
-                r.finished = now
-            schedulers[w].on_batch_done(
-                batch, now, [r.true_time for r in batch.requests]
-            )
-            try_dispatch(w, now)
-        else:
-            try_dispatch(payload, now)
-
-    ok = sum(1 for r in requests if r.ok)
-    late = sum(1 for r in requests if r.finished is not None and not r.ok)
-    dropped = sum(1 for r in requests if r.dropped is not None)
-    unserved = sum(1 for r in requests if r.finished is None and r.dropped is None)
-    lat = np.array(
-        [r.finished - r.release for r in requests if r.finished is not None]
-    )
-    return SimResult(
-        n_total=len(requests),
-        n_finished_ok=ok,
-        n_finished_late=late,
-        n_dropped=dropped,
-        n_unserved=unserved,
-        worker_busy=worker_busy_time,
-        makespan=last_time * n,  # utilisation across the pool
-        latencies=lat,
+    """Drive N replica schedulers (sharing ``executor``) against one
+    arrival stream."""
+    return run_event_loop(
+        requests,
+        [Worker(s, executor) for s in schedulers],
+        policy=policy,
+        seed=seed,
+        horizon=horizon,
+        charge_scheduler_overhead=charge_scheduler_overhead,
     )

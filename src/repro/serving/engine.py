@@ -21,11 +21,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core.distributions import BatchLatencyModel
+from ..core.eventloop import SimResult, Worker, run_event_loop, simulate
 from ..core.request import Request
 from ..core.scheduler import Batch
-from ..core.simulator import SimResult, simulate
 from ..models import Model, ModelConfig
-from .batcher import make_padded_batch
+from .batcher import make_padded_batch, padded_batch_size
 
 __all__ = ["EngineConfig", "JaxExecutor", "ServingEngine"]
 
@@ -50,15 +50,17 @@ class JaxExecutor:
         )
         self._compiled: set[tuple[int, int]] = set()
 
-    def _run(self, tokens: np.ndarray) -> float:
-        # Pad the batch dimension up to the next supported batch size so the
-        # engine serves a small, fixed set of compiled shapes (the XLA
-        # static-shape regime; batch-size buckets as in Clockwork).
-        k = tokens.shape[0]
-        for bs in self.cfg.batch_sizes:
-            if k <= bs:
-                k = bs
-                break
+    def padded_batch_size(self, k: int) -> int:
+        return padded_batch_size(k, self.cfg.batch_sizes)
+
+    def _run(self, tokens: np.ndarray) -> tuple[float, int]:
+        """Execute one padded batch; returns ``(measured_ms, padded_k)``.
+
+        The padded batch size is what the hardware actually ran — the
+        latency model must be fit against it (not the requested k), or the
+        scheduler's Eq.-3 estimates diverge from measurements whenever a
+        batch is padded up to the next supported size."""
+        k = self.padded_batch_size(tokens.shape[0])
         if k > tokens.shape[0]:
             tokens = np.concatenate(
                 [tokens, np.zeros((k - tokens.shape[0],) + tokens.shape[1:], tokens.dtype)]
@@ -71,11 +73,14 @@ class JaxExecutor:
             self._compiled.add(key)
         t0 = time.perf_counter()
         jax.block_until_ready(self._fwd(self.params, batch))
-        return (time.perf_counter() - t0) * 1e3
+        return (time.perf_counter() - t0) * 1e3, k
 
     def __call__(self, batch: Batch, now: float) -> float:
-        padded = make_padded_batch(batch.requests, self.cfg.buckets)
-        return self._run(padded.tokens)
+        # Admission (make_requests) caps lengths at the largest bucket, so
+        # overflow here is a programming error — fail loudly.
+        padded = make_padded_batch(batch.requests, self.cfg.buckets, overflow="error")
+        ms, _ = self._run(padded.tokens)
+        return ms
 
 
 class ServingEngine:
@@ -94,14 +99,20 @@ class ServingEngine:
 
         On an XLA backend the 'size' l is the padded bucket length in
         tokens; c1 converts tokens→ms."""
+        # The grid over supported batch sizes is complete: any off-grid
+        # batch pads up to a supported size before executing, so it would
+        # measure an identical shape.  Fitting against the executed size
+        # reported by _run keeps the attribution correct by construction
+        # (requested k and executed k coincide exactly on this grid).
         xs, ys = [], []
         for bucket in self.cfg.buckets:
-            for k in self.cfg.batch_sizes:
+            for k in sorted(set(self.cfg.batch_sizes)):
                 toks = np.ones((k, bucket), np.int32)
-                ts = [
-                    self.executor._run(toks) for _ in range(self.cfg.profile_reps)
-                ]
-                xs.append((k, bucket))
+                ts, k_pad = [], k
+                for _ in range(self.cfg.profile_reps):
+                    ms, k_pad = self.executor._run(toks)
+                    ts.append(ms)
+                xs.append((k_pad, bucket))
                 ys.append(float(np.median(ts)))
         a = np.array([[1.0, k * l] for k, l in xs])
         coef, *_ = np.linalg.lstsq(a, np.array(ys), rcond=None)
@@ -127,6 +138,10 @@ class ServingEngine:
 
         rng = np.random.default_rng(seed)
         lengths = np.array([length_sampler(rng) for _ in range(n)])
+        # Admission control: the serving path cannot represent payloads
+        # beyond the largest bucket, so cap lengths here (explicitly, once)
+        # rather than letting the batcher truncate tokens silently.
+        lengths = np.minimum(lengths, max(self.cfg.buckets))
         sizes = np.array(
             [bucket_for(int(l), self.cfg.buckets) for l in lengths], np.float64
         )
@@ -164,3 +179,26 @@ class ServingEngine:
     # ------------------------------------------------------------- run
     def serve(self, requests: Sequence[Request], scheduler) -> SimResult:
         return simulate(list(requests), scheduler, self.executor)
+
+    def serve_pool(
+        self,
+        requests: Sequence[Request],
+        schedulers: Sequence,
+        policy: str = "least_loaded",
+        seed: int = 0,
+        horizon: float | None = None,
+        charge_scheduler_overhead: bool = False,
+    ) -> SimResult:
+        """Serve one arrival stream across N replica schedulers (§3.1).
+
+        All replicas share this engine's measured JAX executor (one
+        physical backend timed once per batch); the front-end ``policy``
+        assigns arrivals to replicas."""
+        return run_event_loop(
+            list(requests),
+            [Worker(s, self.executor) for s in schedulers],
+            policy=policy,
+            seed=seed,
+            horizon=horizon,
+            charge_scheduler_overhead=charge_scheduler_overhead,
+        )

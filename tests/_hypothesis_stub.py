@@ -1,0 +1,50 @@
+"""Fallback shims for test modules that use hypothesis property tests.
+
+In an environment without ``hypothesis`` the property-test *modules* must
+still collect and run their example-based tests; only the ``@given`` tests
+should be skipped.  Test files import via::
+
+    try:
+        from hypothesis import given, settings
+        from hypothesis import strategies as st
+    except ModuleNotFoundError:
+        from _hypothesis_stub import given, settings, st
+
+With the stub, ``@given(...)`` replaces the property test with a skipped
+placeholder and strategy constructors are inert.
+"""
+
+from __future__ import annotations
+
+import pytest
+
+
+def settings(*_args, **_kwargs):
+    def deco(fn):
+        return fn
+
+    return deco
+
+
+def given(*_args, **_kwargs):
+    def deco(fn):
+        @pytest.mark.skip(reason="hypothesis is not installed")
+        def _skipped():
+            pass  # pragma: no cover
+
+        _skipped.__name__ = fn.__name__
+        _skipped.__doc__ = fn.__doc__
+        return _skipped
+
+    return deco
+
+
+class _InertStrategies:
+    """Any ``st.xyz(...)`` call returns None — only ever passed to the
+    stubbed ``given``/strategy combinators, never executed."""
+
+    def __getattr__(self, name):
+        return lambda *a, **k: None
+
+
+st = _InertStrategies()

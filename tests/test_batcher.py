@@ -1,0 +1,82 @@
+"""Tests for padded-batch construction and bucket selection."""
+
+import numpy as np
+import pytest
+
+from repro.core import Request
+from repro.serving.batcher import (
+    PaddedBatch,
+    bucket_for,
+    make_padded_batch,
+    padded_batch_size,
+)
+
+BUCKETS = (16, 32, 64)
+
+
+def _req(n_tokens: int) -> Request:
+    return Request(
+        app_id="a",
+        release=0.0,
+        slo=100.0,
+        true_time=1.0,
+        payload=np.arange(1, n_tokens + 1, dtype=np.int32),
+    )
+
+
+# ------------------------------------------------------------ bucket_for
+def test_bucket_for_edges():
+    assert bucket_for(0, BUCKETS) == 16
+    assert bucket_for(1, BUCKETS) == 16
+    assert bucket_for(16, BUCKETS) == 16  # exact boundary stays in bucket
+    assert bucket_for(17, BUCKETS) == 32
+    assert bucket_for(64, BUCKETS) == 64
+
+
+def test_bucket_for_overflow_modes():
+    assert bucket_for(65, BUCKETS) == 64  # clamp (default)
+    with pytest.raises(ValueError, match="exceeds the largest bucket"):
+        bucket_for(65, BUCKETS, clamp=False)
+    with pytest.raises(ValueError, match="negative"):
+        bucket_for(-1, BUCKETS)
+
+
+# ------------------------------------------------------ make_padded_batch
+def test_padded_batch_pads_to_batch_max_bucket():
+    pb = make_padded_batch([_req(3), _req(20)], BUCKETS)
+    assert pb.tokens.shape == (2, 32)
+    assert pb.labels_bucket == 32
+    np.testing.assert_array_equal(pb.lengths, [3, 20])
+    np.testing.assert_array_equal(pb.tokens[0, :3], [1, 2, 3])
+    assert (pb.tokens[0, 3:] == 0).all()  # zero padding, nothing else
+
+
+def test_padded_batch_rejects_over_bucket_payload_by_default():
+    """Payloads longer than the largest bucket used to be truncated
+    silently; now they are an explicit error."""
+    with pytest.raises(ValueError, match="exceed the largest bucket"):
+        make_padded_batch([_req(8), _req(70)], BUCKETS)
+
+
+def test_padded_batch_explicit_clamp():
+    pb = make_padded_batch([_req(8), _req(70)], BUCKETS, overflow="clamp")
+    assert pb.tokens.shape == (2, 64)
+    # the clamped request keeps its first 64 tokens and an honest length
+    np.testing.assert_array_equal(pb.lengths, [8, 64])
+    np.testing.assert_array_equal(pb.tokens[1], np.arange(1, 65))
+
+
+def test_padded_batch_bad_overflow_mode():
+    with pytest.raises(ValueError, match="overflow must be"):
+        make_padded_batch([_req(4)], BUCKETS, overflow="truncate")
+
+
+# --------------------------------------------------- batch-dim padding
+def test_padded_batch_size_next_supported():
+    """Fast-lane coverage of the batch-dimension bucketing the real
+    executor uses (the slow test asserts _run reports it)."""
+    sizes = (1, 2, 4, 8)
+    assert padded_batch_size(1, sizes) == 1
+    assert padded_batch_size(3, sizes) == 4
+    assert padded_batch_size(8, sizes) == 8
+    assert padded_batch_size(9, sizes) == 9  # beyond the largest: as-is

@@ -1,4 +1,5 @@
-"""Tests for multi-replica scale-out (§3.1)."""
+"""Tests for multi-replica scale-out (§3.1) via the ``simulate_cluster``
+compatibility wrapper over the unified event engine."""
 
 import numpy as np
 import pytest
@@ -10,7 +11,7 @@ from repro.core import (
     OrlojScheduler,
     simulate,
 )
-from repro.serving.cluster import simulate_cluster
+from repro.serving.cluster import DISPATCH_POLICIES, simulate_cluster
 from repro.serving.trace import TraceConfig, generate_requests
 from repro.serving.workload import bimodal
 
@@ -24,7 +25,7 @@ def _rs(util, n=600, seed=5):
     )
 
 
-@pytest.mark.parametrize("policy", ["least_loaded", "round_robin", "jsq_work"])
+@pytest.mark.parametrize("policy", sorted(DISPATCH_POLICIES))
 def test_cluster_conservation(policy):
     rs = _rs(util=1.5)  # offered at ~1.5× one worker → needs the pool
     scheds = [OrlojScheduler(LM, initial_dists=rs.initial_dists()) for _ in range(3)]
@@ -35,6 +36,9 @@ def test_cluster_conservation(policy):
         == res.n_total
     )
     assert res.finish_rate > 0.5, policy
+    # honest accounting: explicit pool size, util over makespan·n_workers
+    assert res.n_workers == 3
+    assert res.utilization <= 1.0 + 1e-9, policy
 
 
 def test_more_replicas_help_under_overload():
@@ -58,3 +62,10 @@ def test_cluster_works_with_baseline_schedulers():
     scheds = [ClockworkScheduler(LM, init_samples=warm) for _ in range(2)]
     res = simulate_cluster(rs.fresh(), scheds, ModelExecutor(LM))
     assert res.finish_rate > 0.3
+
+
+def test_cluster_supports_horizon():
+    rs = _rs(util=1.0, n=200)
+    scheds = [OrlojScheduler(LM, initial_dists=rs.initial_dists()) for _ in range(2)]
+    res = simulate_cluster(rs.fresh(), scheds, ModelExecutor(LM), horizon=1.0)
+    assert res.n_unserved > 0

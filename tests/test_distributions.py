@@ -2,8 +2,11 @@
 
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ModuleNotFoundError:  # bare env: property tests skip, the rest run
+    from _hypothesis_stub import given, settings, st
 
 from repro.core.distributions import (
     BatchLatencyModel,

@@ -7,6 +7,9 @@ from repro.core import EmpiricalDistribution, OrlojScheduler, SchedulerConfig
 from repro.models.config import ModelConfig
 from repro.serving.engine import EngineConfig, ServingEngine
 
+# Real jitted-model execution: excluded from the quick CI lane.
+pytestmark = pytest.mark.slow
+
 TINY = ModelConfig(
     name="tiny",
     arch_type="dense",
@@ -33,6 +36,50 @@ def test_profile_fits_eq3(engine):
     assert lm.c0 >= 0 and lm.c1 > 0
     # bigger work → bigger predicted latency
     assert lm.batch_time([32.0] * 4) > lm.batch_time([16.0])
+
+
+def test_executor_reports_padded_batch_size(engine):
+    """A k=3 batch pads up to the next supported size (4) and the executor
+    reports that executed size — the quantity the profiler must fit
+    against for estimates to match measurements."""
+    assert engine.executor.padded_batch_size(3) == 4
+    assert engine.executor.padded_batch_size(4) == 4
+    assert engine.executor.padded_batch_size(9) == 9  # beyond the largest
+    ms, k_pad = engine.executor._run(np.ones((3, 16), np.int32))
+    assert k_pad == 4
+    assert ms > 0.0
+
+
+def test_pool_serving_real_execution(engine):
+    """Two ORLOJ replicas sharing the measured JAX executor finish a light
+    trace through the unified multi-worker loop."""
+    lm = engine.profile_latency_model()
+    reqs, hist = engine.make_requests(
+        24,
+        lm,
+        length_sampler=lambda rng: int(rng.integers(4, 32)),
+        slo_scale=50.0,
+        utilization=0.4,
+        seed=2,
+    )
+    dists = {
+        a: EmpiricalDistribution.from_samples(x)
+        for a, x in hist.items()
+        if len(x) >= 2
+    }
+    scheds = [
+        OrlojScheduler(
+            lm, cfg=SchedulerConfig(batch_sizes=(1, 2, 4)), initial_dists=dists
+        )
+        for _ in range(2)
+    ]
+    res = engine.serve_pool(reqs, scheds)
+    assert res.n_workers == 2
+    assert (
+        res.n_finished_ok + res.n_finished_late + res.n_dropped + res.n_unserved
+        == 24
+    )
+    assert res.utilization <= 1.0 + 1e-9
 
 
 def test_serve_real_requests_end_to_end(engine):

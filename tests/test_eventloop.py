@@ -1,0 +1,205 @@
+"""Tests for the unified multi-worker discrete-event engine."""
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    BatchLatencyModel,
+    ModelExecutor,
+    OrlojScheduler,
+    Worker,
+    run_event_loop,
+    simulate,
+)
+from repro.core.eventloop import DISPATCH_POLICIES
+from repro.serving.trace import TraceConfig, generate_requests
+from repro.serving.workload import bimodal
+
+LM = BatchLatencyModel(c0=25.0, c1=1.0)
+SLOW_LM = BatchLatencyModel(c0=50.0, c1=2.0)
+
+ALL_POLICIES = tuple(DISPATCH_POLICIES)  # every registered dispatch policy
+
+
+def _rs(util, n=500, seed=11):
+    return generate_requests(
+        bimodal(1.0), LM, slo_scale=3.0,
+        cfg=TraceConfig(n_requests=n, seed=seed, utilization=util),
+    )
+
+
+def _orloj(rs, lm=LM):
+    return OrlojScheduler(lm, initial_dists=rs.initial_dists())
+
+
+# ------------------------------------------------- single-worker equivalence
+def test_one_worker_reproduces_simulate_bitwise():
+    """The unified engine at n_workers=1 is *the* §5 harness: identical
+    counts and bit-identical latencies to ``simulate`` on a seeded trace
+    (jittered executor included — same seed, same draws)."""
+    rs = _rs(util=0.9)
+    a = simulate(
+        rs.fresh(), _orloj(rs), ModelExecutor(LM, jitter=0.05, seed=3)
+    )
+    b = run_event_loop(
+        rs.fresh(),
+        [Worker(_orloj(rs), ModelExecutor(LM, jitter=0.05, seed=3))],
+        policy="round_robin",
+    )
+    for f in (
+        "n_total",
+        "n_finished_ok",
+        "n_finished_late",
+        "n_dropped",
+        "n_unserved",
+        "worker_busy",
+        "makespan",
+        "n_workers",
+        "peak_heap_size",
+    ):
+        assert getattr(a, f) == getattr(b, f), f
+    assert a.latencies.shape == b.latencies.shape
+    assert a.latencies.tobytes() == b.latencies.tobytes()  # bit-for-bit
+    assert a.n_workers == 1
+
+
+@pytest.mark.parametrize("policy", ALL_POLICIES)
+def test_policy_choice_is_noop_for_one_worker(policy):
+    rs = _rs(util=0.8, n=200)
+    res = run_event_loop(
+        rs.fresh(), [Worker(_orloj(rs), ModelExecutor(LM))], policy=policy
+    )
+    assert res.n_unserved == 0
+    assert res.utilization <= 1.0 + 1e-9
+
+
+# ------------------------------------------------------------ wake dedup
+def test_event_heap_stays_bounded():
+    """Per-worker wake dedup: at most one *live* WAKE per worker (plus any
+    superseded earlier-re-armed wakes still waiting to fire as no-ops).
+    On this seeded light-load trace the high-water mark stays within
+    n_requests + 2·n_workers; the pre-unification cluster loop pushed a
+    wake on *every* idle dispatch attempt and flooded far past that."""
+    n, k = 400, 4
+    rs = _rs(util=0.10, n=n)  # light load: workers mostly idle → wake-heavy
+    for policy in ALL_POLICIES:
+        res = run_event_loop(
+            rs.fresh(),
+            [Worker(_orloj(rs), ModelExecutor(LM)) for _ in range(k)],
+            policy=policy,
+        )
+        assert res.peak_heap_size <= n + 2 * k, policy
+        assert res.n_unserved == 0
+
+
+# ------------------------------------------------- pool accounting honesty
+def test_makespan_and_utilization_are_honest():
+    """makespan is the virtual clock of the last event (not multiplied by
+    the pool size), n_workers is explicit, and pool utilization is
+    worker_busy / (makespan · n_workers) ≤ 1."""
+    rs = _rs(util=2.0)
+    one = simulate(rs.fresh(), _orloj(rs), ModelExecutor(LM))
+    pool = run_event_loop(
+        rs.fresh(),
+        [Worker(_orloj(rs), ModelExecutor(LM)) for _ in range(3)],
+        policy="least_loaded",
+    )
+    assert pool.n_workers == 3
+    # same trace: the pool's clock ends within ~one batch of the
+    # single-worker clock, nowhere near 3× (the old makespan=last·n hack)
+    assert pool.makespan < 1.5 * one.makespan
+    assert pool.worker_busy <= pool.makespan * pool.n_workers + 1e-9
+    assert pool.utilization <= 1.0 + 1e-9
+    # a 3-replica pool at 2× one-worker load must beat the single worker
+    assert pool.finish_rate > one.finish_rate
+
+
+# ----------------------------------------------- heterogeneous replicas
+def test_heterogeneous_pool_all_policies():
+    """4 replicas, two fast + two slow (different executors AND different
+    latency models per scheduler): completes under every dispatch policy
+    with bounded heap and honest utilization."""
+    n = 500
+    rs = _rs(util=1.8, n=n)
+    for policy in ALL_POLICIES:
+        workers = []
+        for i in range(4):
+            lm = LM if i < 2 else SLOW_LM
+            workers.append(
+                Worker(_orloj(rs, lm=lm), ModelExecutor(lm, seed=i))
+            )
+        res = run_event_loop(rs.fresh(), workers, policy=policy, seed=7)
+        assert res.n_workers == 4
+        assert (
+            res.n_finished_ok + res.n_finished_late + res.n_dropped
+            + res.n_unserved == n
+        ), policy
+        assert res.utilization <= 1.0 + 1e-9, policy
+        assert res.peak_heap_size <= n + 2 * 4, policy
+        assert res.finish_rate > 0.4, policy
+
+
+def test_p2c_tracks_jsq_under_load():
+    """Two load probes per arrival should get within striking distance of
+    the full-information work-queue balancer."""
+    rs = _rs(util=1.6, n=600, seed=23)
+
+    def run(policy):
+        return run_event_loop(
+            rs.fresh(),
+            [Worker(_orloj(rs), ModelExecutor(LM)) for _ in range(4)],
+            policy=policy,
+            seed=1,
+        ).finish_rate
+
+    assert run("p2c") > run("jsq_work") - 0.15
+
+
+# -------------------------------------------------- horizon & overhead
+def test_horizon_truncates_pool_run():
+    rs = _rs(util=1.0, n=300)
+    res = run_event_loop(
+        rs.fresh(),
+        [Worker(_orloj(rs), ModelExecutor(LM)) for _ in range(2)],
+        horizon=1.0,  # ms: essentially nothing finishes
+    )
+    assert res.n_unserved > 0
+    # honest truncation: the clock reads the horizon, not the first event
+    # beyond it, and busy time inside the window keeps utilization ≤ 1
+    assert res.makespan == 1.0
+    assert 0.0 <= res.utilization <= 1.0 + 1e-9
+
+
+def test_overhead_charging_completes():
+    reqs = _rs(util=0.5, n=100)
+    rs = reqs.fresh()
+    res = run_event_loop(
+        rs,
+        [Worker(_orloj(reqs), ModelExecutor(LM))],
+        charge_scheduler_overhead=True,
+    )
+    assert res.n_unserved == 0
+    # charged overhead pushes every batch start strictly past its pop time
+    assert all(r.started is None or r.started > r.release for r in rs)
+
+
+# ------------------------------------------------------------- plumbing
+def test_unknown_policy_rejected():
+    rs = _rs(util=0.5, n=10)
+    with pytest.raises(ValueError, match="unknown dispatch policy"):
+        run_event_loop(
+            rs.fresh(), [Worker(_orloj(rs), ModelExecutor(LM))], policy="nope"
+        )
+    with pytest.raises(ValueError, match="at least one worker"):
+        run_event_loop(rs.fresh(), [])
+
+
+def test_callable_policy():
+    rs = _rs(util=1.0, n=200)
+    res = run_event_loop(
+        rs.fresh(),
+        [Worker(_orloj(rs), ModelExecutor(LM)) for _ in range(2)],
+        policy=lambda req, now, pool: req.rid % 2,
+    )
+    assert res.n_unserved == 0
+    assert res.n_workers == 2
