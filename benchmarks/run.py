@@ -34,6 +34,7 @@ def main() -> None:
         "table5": tables.table5_real_tasks,
         "fig12": queue_micro.fig12_queue,
         "fig12b": queue_micro.fig12_mixed_ops,
+        "sched": queue_micro.sched_throughput,  # writes BENCH_sched.json
         "fig13": sensitivity.fig13_b_sweep,
         "fig14": sensitivity.fig14_min_exec,
         "roofline": bench_roofline,

@@ -93,6 +93,13 @@ class _BaselineBase:
         for x in alone_times:
             self.est.observe(x)
 
+    def on_arrivals(self, reqs: Sequence[Request], now: float) -> None:
+        """Bulk-arrival entry point (the event loop coalesces same-timestamp
+        arrivals); the baselines have no vectorized scoring, so it is just
+        the per-request hook in order."""
+        for req in reqs:
+            self.on_arrival(req, now)
+
     @property
     def n_pending(self) -> int:  # pragma: no cover - overridden where needed
         raise NotImplementedError

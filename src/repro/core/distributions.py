@@ -62,6 +62,13 @@ class EmpiricalDistribution:
             raise ValueError("probs must sum to a positive finite value")
         object.__setattr__(self, "edges", edges)
         object.__setattr__(self, "probs", np.maximum(probs, 0.0) / total)
+        # CDF at the knots, computed once: cdf()/quantile()/iid_max/
+        # expected_max/rebin all consume it, and re-running np.cumsum per
+        # call dominated the distribution algebra on the hot path.  Frozen
+        # so a caller cannot corrupt the cache in place.
+        knots = np.concatenate([[0.0], np.cumsum(self.probs)])
+        knots.flags.writeable = False
+        object.__setattr__(self, "_cdf_knots", knots)
 
     # -- constructors -----------------------------------------------------
     @classmethod
@@ -96,11 +103,11 @@ class EmpiricalDistribution:
     def cdf(self, x: np.ndarray | float) -> np.ndarray:
         """Piecewise-linear CDF evaluated at ``x``."""
         x = np.asarray(x, dtype=np.float64)
-        cum = np.concatenate([[0.0], np.cumsum(self.probs)])
-        return np.interp(x, self.edges, cum, left=0.0, right=1.0)
+        return np.interp(x, self.edges, self._cdf_knots, left=0.0, right=1.0)
 
     def cdf_at_knots(self) -> np.ndarray:
-        return np.concatenate([[0.0], np.cumsum(self.probs)])
+        """Cached CDF at the bin edges (read-only view — do not mutate)."""
+        return self._cdf_knots
 
     def mean(self) -> float:
         mids = 0.5 * (self.edges[:-1] + self.edges[1:])
@@ -173,29 +180,37 @@ def iid_max(dist: EmpiricalDistribution, k: int) -> EmpiricalDistribution:
     return EmpiricalDistribution(dist.edges, np.diff(cum))
 
 
-def _merged_grid(dists: Sequence[EmpiricalDistribution], max_knots: int = 256) -> np.ndarray:
+def _merged_grid(
+    dists: Sequence[EmpiricalDistribution], max_knots: int = 256
+) -> tuple[np.ndarray, bool]:
+    """Merged knot grid and whether it is *exact* (kept every input knot
+    rather than subsampling past ``max_knots``)."""
     knots = np.unique(np.concatenate([d.edges for d in dists]))
-    if knots.size > max_knots:
-        knots = np.interp(
-            np.linspace(0, 1, max_knots), np.linspace(0, 1, knots.size), knots
-        )
-        knots = np.unique(knots)
-    return knots
+    if knots.size <= max_knots:
+        return knots, True
+    knots = np.interp(
+        np.linspace(0, 1, max_knots), np.linspace(0, 1, knots.size), knots
+    )
+    return np.unique(knots), False
 
 
-def hetero_max(dists: Sequence[EmpiricalDistribution]) -> EmpiricalDistribution:
+def hetero_max(
+    dists: Sequence[EmpiricalDistribution], grid: np.ndarray | None = None
+) -> EmpiricalDistribution:
     """Max of independent, non-identically distributed variables (§4.2.2).
 
     The k-th (maximum) order statistic of independent variables has CDF
     ``Π_i F_i`` — the closed form to which Eq. 8 (Özbey et al.) reduces for
-    the top order statistic.  Evaluated on the merged knot grid.
+    the top order statistic.  Evaluated on the merged knot grid (pass a
+    precomputed ``grid`` to skip the re-merge on repeated calls).
     """
     dists = list(dists)
     if not dists:
         raise ValueError("need at least one distribution")
-    if len(dists) == 1:
+    if len(dists) == 1 and grid is None:
         return dists[0]
-    grid = _merged_grid(dists)
+    if grid is None:
+        grid, _ = _merged_grid(dists)
     cdf = np.ones_like(grid)
     for d in dists:
         cdf = cdf * d.cdf(grid)
@@ -241,8 +256,12 @@ def _pdf(dist: EmpiricalDistribution, xs: np.ndarray) -> np.ndarray:
 def mixture(
     dists: Sequence[EmpiricalDistribution],
     weights: Sequence[float] | None = None,
+    grid: np.ndarray | None = None,
 ) -> EmpiricalDistribution:
-    """Weighted mixture of app distributions (multimodal joint, §2.2/§4.3)."""
+    """Weighted mixture of app distributions (multimodal joint, §2.2/§4.3).
+
+    Pass a precomputed ``grid`` (e.g. the scheduler's cached merged knot
+    grid) to skip the per-call grid merge."""
     dists = list(dists)
     if not dists:
         raise ValueError("need at least one distribution")
@@ -250,7 +269,8 @@ def mixture(
         weights = [1.0] * len(dists)
     w = np.asarray(weights, dtype=np.float64)
     w = w / w.sum()
-    grid = _merged_grid(dists)
+    if grid is None:
+        grid, _ = _merged_grid(dists)
     cdf = np.zeros_like(grid)
     for wi, d in zip(w, dists):
         cdf = cdf + wi * d.cdf(grid)

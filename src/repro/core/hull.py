@@ -21,6 +21,8 @@ import bisect
 import math
 from typing import Hashable, Iterable, Sequence
 
+import numpy as np
+
 __all__ = ["HullQueue"]
 
 
@@ -101,6 +103,37 @@ class HullQueue:
         self._alive[key] = (alpha, beta)
         self._push_block([(key, alpha, beta)])
 
+    def insert_many(
+        self, items: Iterable[tuple[Hashable, float, float]]
+    ) -> None:
+        """Insert many lines as ONE static block: a single O(n log n) hull
+        build instead of n cascading binary-counter merges (the arrival-path
+        bulk load, DESIGN.md §Hot-path).  All-or-nothing: validates every
+        item before touching the structure."""
+        items = list(items)
+        seen: set[Hashable] = set()
+        for key, alpha, beta in items:
+            if key in self._alive or key in seen:
+                raise KeyError(f"duplicate key {key!r}")
+            seen.add(key)
+            if not (math.isfinite(alpha) and math.isfinite(beta)):
+                raise ValueError("non-finite line coefficients (overflow guard)")
+        if not items:
+            return
+        for key, alpha, beta in items:
+            self._alive[key] = (alpha, beta)
+        self._push_block(items)
+
+    def bulk_load(
+        self, items: Iterable[tuple[Hashable, float, float]]
+    ) -> None:
+        """Discard all current lines and load ``items`` as one block — the
+        O(n log n) full-rebuild path (base reset / profiler snapshot swap)."""
+        self._alive.clear()
+        self._blocks = []
+        self._dead = 0
+        self.insert_many(items)
+
     def delete(self, key: Hashable) -> None:
         del self._alive[key]
         self._dead += 1
@@ -108,8 +141,22 @@ class HullQueue:
             self._compact()
 
     def update(self, key: Hashable, alpha: float, beta: float) -> None:
-        self.delete(key)
-        self.insert(key, alpha, beta)
+        """Replace ``key``'s line in place: overwrite the live coefficients
+        (the stale block entry tombstones lazily via the ``_is_alive``
+        check) and push the new line, without the delete+insert round trip
+        and its early compaction churn."""
+        cur = self._alive.get(key)
+        if cur is None:
+            raise KeyError(key)
+        if cur == (alpha, beta):
+            return  # no-op: the live block entry is already this line
+        if not (math.isfinite(alpha) and math.isfinite(beta)):
+            raise ValueError("non-finite line coefficients (overflow guard)")
+        self._alive[key] = (alpha, beta)
+        self._dead += 1  # the superseded copy lingering in its block
+        self._push_block([(key, alpha, beta)])
+        if self._dead > max(8, len(self._alive)):
+            self._compact()
 
     def _push_block(self, lines) -> None:
         self._blocks.append(_Block(lines))
@@ -173,3 +220,36 @@ class HullQueue:
             return None
         self.delete(got[0])
         return got
+
+    def pop_topk(self, x: float, k: int) -> list[tuple[Hashable, float]]:
+        """Pop the (up to) k live lines maximising ``α·x + β`` at one fixed
+        ``x``, best first.
+
+        PopBatch pops at a *single* sweep position, so the top-k reduces to
+        one vectorized O(n) value scan + argpartition.  Popping through the
+        hull instead would surface a fresh tombstone at the top of the
+        largest block on every pop and pay k near-full purge rebuilds
+        (DESIGN.md §Hot-path); the envelope machinery is only worth it for
+        queries at varying ``x``.
+        """
+        n = len(self._alive)
+        if k <= 0 or n == 0:
+            return []
+        if k == 1 or n <= 4:
+            out = []
+            for _ in range(min(k, n)):
+                got = self.pop_max(x)
+                if got is None:
+                    break
+                out.append(got)
+            return out
+        keys = list(self._alive)
+        coef = np.array(list(self._alive.values()))
+        vals = coef[:, 0] * x + coef[:, 1]
+        k = min(k, n)
+        idx = np.argpartition(-vals, k - 1)[:k]
+        idx = idx[np.argsort(-vals[idx], kind="stable")]
+        out = [(keys[i], float(vals[i])) for i in idx]
+        for key, _ in out:
+            self.delete(key)
+        return out

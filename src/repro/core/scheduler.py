@@ -10,6 +10,15 @@ Structure per Algorithm 1:
   the drop phase (lines 10–14);
 - a milestone heap triggering lazy (α, β) re-computation (lines 5–9);
 - base-time reset for exponential-overflow handling (lines 2–4, §4.4).
+
+Hot path (DESIGN.md §Hot-path): arrivals are delivered in bulk through
+:meth:`OrlojScheduler.on_arrivals` — one :meth:`BinScoreModel.score_many`
+pass plus one :meth:`HullQueue.insert_many` block per batch size — and the
+full-recompute paths (base reset, profiler snapshot swap) rebuild each hull
+with :meth:`HullQueue.bulk_load` from a single vectorized scoring pass.
+The distribution algebra behind a snapshot swap is cached: the merged knot
+grid is computed once, ``iid_max(mix, bs)`` is one CDF-power per batch size
+off a shared knot-CDF, and per-(app, bs) drop-phase estimates are memoized.
 """
 
 from __future__ import annotations
@@ -24,16 +33,58 @@ import numpy as np
 from .distributions import (
     BatchLatencyModel,
     EmpiricalDistribution,
+    _merged_grid,
     hetero_max,
     iid_max,
     mixture,
 )
 from .hull import HullQueue
-from .priority import DEFAULT_B, RESET_EXPONENT, BinScoreModel
+from .priority import DEFAULT_B, RESET_EXPONENT, BinScoreModel, aggregate_steps
 from .profiler import OnlineProfiler, ProfilerConfig
-from .request import Request
+from .request import PiecewiseStepCost, Request
 
 __all__ = ["SchedulerConfig", "OrlojScheduler", "Batch"]
+
+
+def _flatten_steps(
+    reqs: Sequence[Request],
+) -> tuple[np.ndarray, np.ndarray, np.ndarray | None]:
+    """Flatten the requests' SLO cost steps into ``(deadlines, costs,
+    seg_starts)`` arrays for :meth:`BinScoreModel.score_many`.
+
+    ``seg_starts`` is ``None`` on the common all-single-step path (rows map
+    1:1 to requests); otherwise it holds each request's first row for
+    :func:`~repro.core.priority.aggregate_steps`."""
+    if all(not r.extra_deadlines for r in reqs):
+        d = np.array([r.release + r.slo for r in reqs])
+        c = np.array([r.cost for r in reqs])
+        return d, c, None
+    ds: list[float] = []
+    cs: list[float] = []
+    starts: list[int] = []
+    for r in reqs:
+        starts.append(len(ds))
+        fn = r.cost_fn()
+        steps = fn.steps() if isinstance(fn, PiecewiseStepCost) else [fn]
+        for s in steps:
+            ds.append(s.deadline)
+            cs.append(s.cost)
+    return np.array(ds), np.array(cs), np.array(starts)
+
+
+def _score_flat(
+    model: BinScoreModel,
+    deadlines: np.ndarray,
+    costs: np.ndarray,
+    seg_starts: np.ndarray | None,
+    t: float,
+    base: float,
+) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Per-request (α, β, milestone) arrays from flattened step arrays."""
+    alpha, beta, milestone = model.score_many(deadlines, costs, t, base)
+    if seg_starts is None:
+        return alpha, beta, milestone
+    return aggregate_steps(alpha, beta, milestone, seg_starts)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -105,18 +156,38 @@ class OrlojScheduler:
     def _mixture(self) -> EmpiricalDistribution:
         dists = list(self._app_dists.values())
         if not dists:
+            self._grid = self._default_dist.edges
+            self._grid_exact = True
             return self._default_dist
-        return mixture(dists)
+        # Cache the merged knot grid: every downstream evaluation of the
+        # snapshot (mixture CDF, iid-max powers, drop-phase hetero_max)
+        # shares it.  ``_grid_exact`` records whether the merge kept every
+        # app knot (i.e. no 256-knot subsampling) — only then may the
+        # per-app drop estimates reuse it without losing their own knots.
+        self._grid, self._grid_exact = _merged_grid(dists)
+        return mixture(dists, grid=self._grid)
+
+    def _iid_max_mix(self, k: int) -> EmpiricalDistribution:
+        """Memoized ``iid_max(mix, k)`` — the CDF power is one vectorized
+        pass over the cached knot CDF, computed at most once per snapshot."""
+        got = self._iid_max_cache.get(k)
+        if got is None:
+            got = iid_max(self._mix, k)
+            self._iid_max_cache[k] = got
+        return got
 
     def _rebuild_models(self) -> None:
         """Precompute per-batch-size L_B histograms, score models and
         expected latencies from the current app distributions (§4.3 — this
-        is the heavy computation moved off the critical path)."""
+        is the heavy computation moved off the critical path).  One snapshot
+        swap costs one mixture evaluation on the cached grid plus one CDF
+        power + hull-ready score model per batch size."""
         mix = self._mixture()
         self._mix = mix
         self._app_bs_est.clear()
+        self._iid_max_cache: dict[int, EmpiricalDistribution] = {1: mix}
         for bs, st in self._bs_state.items():
-            max_dist = iid_max(mix, bs)
+            max_dist = self._iid_max_mix(bs)
             batch_dist = self.latency_model.batch_dist(max_dist, bs)
             st.score_model = BinScoreModel(batch_dist, b=self.cfg.b)
             st.est_latency = self.latency_model.expected_batch_time(mix, bs)
@@ -132,7 +203,14 @@ class OrlojScheduler:
             if bs == 1:
                 max_dist = own
             else:
-                max_dist = hetero_max([own, iid_max(self._mix, bs - 1)])
+                # reuse the snapshot's cached knot grid when it is exact
+                # (it then contains every knot of `own` and of the mix);
+                # a subsampled grid would drop own's knots, so fall back
+                # to the per-call merge there
+                max_dist = hetero_max(
+                    [own, self._iid_max_mix(bs - 1)],
+                    grid=self._grid if self._grid_exact else None,
+                )
             got = self.latency_model.c0 + self.latency_model.c1 * bs * max_dist.mean()
             self._app_bs_est[key] = got
         return got
@@ -141,16 +219,35 @@ class OrlojScheduler:
     # Arrival / bookkeeping
     # ------------------------------------------------------------------
     def on_arrival(self, req: Request, now: float) -> None:
-        self._pending[req.rid] = req
-        feas = set()
+        self.on_arrivals((req,), now)
+
+    def on_arrivals(self, reqs: Sequence[Request], now: float) -> None:
+        """Bulk arrival: score every request at every batch size in one
+        vectorized Eq.-2 pass per batch size and insert the new lines as a
+        single hull block (the event loop coalesces same-timestamp
+        arrivals into one call)."""
+        reqs = list(reqs)
+        if not reqs:
+            return
+        deadlines, costs, seg_starts = _flatten_steps(reqs)
+        rids = [r.rid for r in reqs]
+        all_bs = set(self._bs_state)
+        for req, rid in zip(reqs, rids):
+            self._pending[rid] = req
+            self._feasible[rid] = set(all_bs)
+        heap_entries = [(r.release + r.slo, r.rid) for r in reqs]
         for bs, st in self._bs_state.items():
-            feas.add(bs)
-            sc = st.score_model.score(req, now, self._base)
-            st.hull.insert(req.rid, sc.alpha, sc.beta)
-            heapq.heappush(st.deadline_heap, (req.deadline, req.rid))
-            if math.isfinite(sc.milestone):
-                heapq.heappush(self._milestones, (sc.milestone, req.rid, bs))
-        self._feasible[req.rid] = feas
+            alpha, beta, miles = _score_flat(
+                st.score_model, deadlines, costs, seg_starts, now, self._base
+            )
+            st.hull.insert_many(
+                list(zip(rids, alpha.tolist(), beta.tolist()))
+            )
+            for entry in heap_entries:
+                heapq.heappush(st.deadline_heap, entry)
+            for rid, m in zip(rids, miles.tolist()):
+                if math.isfinite(m):
+                    heapq.heappush(self._milestones, (m, rid, bs))
 
     def on_batch_done(
         self, batch: Batch, now: float, alone_times: Sequence[float]
@@ -176,28 +273,57 @@ class OrlojScheduler:
             self._recompute_all(now)
 
     def _recompute_all(self, now: float) -> None:
+        """Full (α, β) refresh (base reset, snapshot swap): one vectorized
+        scoring pass per batch size + an O(n log n) hull bulk load, instead
+        of O(pending · |bs|) scalar scores with cascading block merges."""
         self._milestones.clear()
+        reqs = list(self._pending.values())
+        if not reqs:
+            for st in self._bs_state.values():
+                st.hull = HullQueue()
+            return
+        deadlines, costs, seg_starts = _flatten_steps(reqs)
+        rids = [r.rid for r in reqs]
         for bs, st in self._bs_state.items():
-            st.hull = HullQueue()
-        for req in self._pending.values():
-            for bs in self._feasible[req.rid]:
-                st = self._bs_state[bs]
-                sc = st.score_model.score(req, now, self._base)
-                st.hull.insert(req.rid, sc.alpha, sc.beta)
-                if math.isfinite(sc.milestone):
-                    heapq.heappush(self._milestones, (sc.milestone, req.rid, bs))
+            alpha, beta, miles = _score_flat(
+                st.score_model, deadlines, costs, seg_starts, now, self._base
+            )
+            lines = []
+            for rid, a, b_, m in zip(
+                rids, alpha.tolist(), beta.tolist(), miles.tolist()
+            ):
+                if bs not in self._feasible[rid]:
+                    continue
+                lines.append((rid, a, b_))
+                if math.isfinite(m):
+                    heapq.heappush(self._milestones, (m, rid, bs))
+            st.hull.bulk_load(lines)
 
     def _update_due_scores(self, now: float) -> None:
+        # Drain every due milestone first, then re-score the affected
+        # (rid, bs) pairs batched per batch size.  A freshly computed
+        # milestone is strictly in the future up to float rounding; the
+        # `> now` guard below keeps an ulp-coincident one from re-entering
+        # the heap at the same timestamp.
+        due: dict[int, set[int]] = {}
         while self._milestones and self._milestones[0][0] <= now:
             _, rid, bs = heapq.heappop(self._milestones)
-            req = self._pending.get(rid)
-            if req is None or bs not in self._feasible.get(rid, ()):  # stale
-                continue
+            if rid in self._pending and bs in self._feasible.get(rid, ()):
+                due.setdefault(bs, set()).add(rid)
+        for bs, rid_set in due.items():
             st = self._bs_state[bs]
-            sc = st.score_model.score(req, now, self._base)
-            st.hull.update(rid, sc.alpha, sc.beta)
-            if math.isfinite(sc.milestone):
-                heapq.heappush(self._milestones, (sc.milestone, rid, bs))
+            rids = list(rid_set)
+            reqs = [self._pending[rid] for rid in rids]
+            deadlines, costs, seg_starts = _flatten_steps(reqs)
+            alpha, beta, miles = _score_flat(
+                st.score_model, deadlines, costs, seg_starts, now, self._base
+            )
+            for rid, a, b_, m in zip(
+                rids, alpha.tolist(), beta.tolist(), miles.tolist()
+            ):
+                st.hull.update(rid, a, b_)
+                if math.isfinite(m) and m > now:
+                    heapq.heappush(self._milestones, (m, rid, bs))
 
     # ------------------------------------------------------------------
     # Drop phase (Algorithm 1 lines 10–14)
@@ -264,15 +390,12 @@ class OrlojScheduler:
             wake = self._milestones[0][0] if self._milestones else None
             return None, wake
 
-        # PopBatch: top `candidate` requests by ORLOJ score.
+        # PopBatch: top `candidate` requests by ORLOJ score, in one
+        # fixed-x top-k pop (avoids k cascading tombstone purges).
         x = self._x(now)
         st = self._bs_state[candidate]
         picked: list[Request] = []
-        for _ in range(candidate):
-            got = st.hull.pop_max(x)
-            if got is None:
-                break
-            rid, _val = got
+        for rid, _val in st.hull.pop_topk(x, candidate):
             req = self._pending[rid]
             picked.append(req)
             self._feasible[rid].discard(candidate)
