@@ -1,4 +1,5 @@
-"""Beyond-paper ablations of ORLOJ's design choices.
+"""Beyond-paper ablations of ORLOJ's design choices — a thin wrapper over
+the :func:`repro.eval.grid.ablation` spec grid.
 
 - Algorithm-1 line-16 ordering: the prose ("earliest deadline first") vs
   the literal pseudocode ("(D, bs) descending") — see DESIGN.md
@@ -11,39 +12,10 @@
 
 from __future__ import annotations
 
-import numpy as np
+from repro.eval import grid
 
-from repro.core import (
-    ModelExecutor,
-    OrlojScheduler,
-    SchedulerConfig,
-    simulate,
-)
-from repro.serving.trace import TraceConfig, generate_requests
-from repro.serving.workload import bimodal, k_modal
-
-from .common import LM
-
-
-def _run(apps, slo, cfg: SchedulerConfig, seed=11) -> float:
-    rs = generate_requests(
-        apps, LM, slo_scale=slo, cfg=TraceConfig(n_requests=1_200, seed=seed)
-    )
-    sched = OrlojScheduler(LM, cfg=cfg, initial_dists=rs.initial_dists())
-    return simulate(rs.fresh(), sched, ModelExecutor(LM)).finish_rate
+from .common import run_and_emit
 
 
 def ablation(full: bool = False) -> None:
-    apps = k_modal(3)
-    slos = (1.5, 3.0, 5.0)
-    variants = {
-        "base": SchedulerConfig(),
-        "paper-desc-order": SchedulerConfig(bs_order="paper_desc"),
-        "no-refine": SchedulerConfig(refine_feasibility=False),
-        "bins-4": SchedulerConfig(n_bins=4),
-        "bins-32": SchedulerConfig(n_bins=32),
-    }
-    for name, cfg in variants.items():
-        for slo in slos:
-            fr = _run(apps, slo, cfg)
-            print(f"ablation/{name}/slo{slo:g},0,finish_rate={fr:.3f}", flush=True)
+    run_and_emit(grid.ablation(full))

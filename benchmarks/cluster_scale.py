@@ -1,70 +1,22 @@
 """Scale-out study (beyond-paper; §3.1 replica pools): finish rate vs
 replica count and front-end dispatch policy under overload, plus a
-heterogeneous-pool study (fast + slow replicas) that only the unified
-event engine can express."""
+heterogeneous-pool study (fast + slow replicas) — thin wrappers over the
+:mod:`repro.eval.grid` spec constructors (the specs' ``n_workers`` /
+``policy`` / ``hetero`` fields drive the unified event engine)."""
 
 from __future__ import annotations
 
-import numpy as np
+from repro.eval import grid
 
-from repro.core import BatchLatencyModel, ModelExecutor, OrlojScheduler
-from repro.core.eventloop import DISPATCH_POLICIES, Worker, run_event_loop
-from repro.serving.cluster import simulate_cluster
-from repro.serving.trace import TraceConfig, generate_requests
-from repro.serving.workload import bimodal
-
-from .common import LM
-
-POLICIES = tuple(DISPATCH_POLICIES)
-SLOW_LM = BatchLatencyModel(c0=2 * LM.c0, c1=2 * LM.c1)
-
-
-def _trace(n: int, utilization: float, seed: int = 13):
-    return generate_requests(
-        bimodal(1.0), LM, slo_scale=3.0,
-        cfg=TraceConfig(n_requests=n, seed=seed, utilization=utilization),
-    )
+from .common import run_and_emit
 
 
 def cluster_scale(full: bool = False) -> None:
-    replicas = (1, 2, 4, 8) if full else (1, 2, 4)
-    n = 1_500 if full else 800
-    for k in replicas:
-        # offered load ≈ 0.8 × k single-worker capacities
-        rs = _trace(n, utilization=0.8 * k)
-        for policy in POLICIES:
-            scheds = [
-                OrlojScheduler(LM, initial_dists=rs.initial_dists())
-                for _ in range(k)
-            ]
-            res = simulate_cluster(rs.fresh(), scheds, ModelExecutor(LM), policy=policy)
-            print(
-                f"cluster/{policy}/r{k},0,finish_rate={res.finish_rate:.3f};util={res.utilization:.2f}",
-                flush=True,
-            )
+    run_and_emit(grid.cluster(full))
 
 
 def cluster_hetero(full: bool = False) -> None:
-    """Mixed pool: half fast, half slow replicas (2× latency model).  Work-
+    """Mixed pool: half fast, half slow replicas (2x latency model).  Work-
     and distribution-aware policies should exploit the asymmetry that
     count-based balancing cannot see."""
-    n = 1_500 if full else 800
-    k = 4
-    # offered load ≈ 0.8 × the mixed pool's aggregate capacity (a slow
-    # replica is worth half a fast one here)
-    rs = _trace(n, utilization=0.8 * (k / 2 + k / 4))
-    for policy in POLICIES:
-        workers = []
-        for i in range(k):
-            lm = LM if i < k // 2 else SLOW_LM
-            workers.append(
-                Worker(
-                    OrlojScheduler(lm, initial_dists=rs.initial_dists()),
-                    ModelExecutor(lm, seed=i),
-                )
-            )
-        res = run_event_loop(rs.fresh(), workers, policy=policy, seed=1)
-        print(
-            f"cluster_hetero/{policy}/r{k},0,finish_rate={res.finish_rate:.3f};util={res.utilization:.2f}",
-            flush=True,
-        )
+    run_and_emit(grid.cluster_hetero(full))

@@ -1,64 +1,17 @@
-"""Shared benchmark plumbing: run the four systems on a workload and emit
-``name,us_per_call,derived`` CSV rows (one benchmark per paper table/figure)."""
+"""Shared benchmark plumbing — thin formatting layer over ``repro.eval``.
+
+The sweeps themselves are typed spec grids (:mod:`repro.eval.grid`); this
+module renders :class:`~repro.eval.spec.ExperimentResult` s back into the
+historical ``name,us_per_call,derived`` CSV rows so ``python -m
+benchmarks.run`` output keeps its schema.  The ``us_per_call`` column is
+the *scheduler decision time* per request (time inside scheduler hooks,
+measured by the event loop) — not the whole simulation wall-clock.
+"""
 
 from __future__ import annotations
 
-import time
-
-import numpy as np
-
-from repro.core import (
-    BatchLatencyModel,
-    ClipperScheduler,
-    ClockworkScheduler,
-    ModelExecutor,
-    NexusScheduler,
-    OrlojScheduler,
-    SchedulerConfig,
-    simulate,
-)
-from repro.serving.trace import TraceConfig, generate_requests
-
-LM = BatchLatencyModel(c0=25.0, c1=1.0)
-SYSTEMS = ("orloj", "clockwork", "nexus", "clipper")
-
-
-def run_case(
-    apps,
-    slo_scale: float,
-    *,
-    n_requests: int = 1_200,
-    utilization: float = 0.85,
-    seed: int = 7,
-    lm: BatchLatencyModel | None = None,
-    systems=SYSTEMS,
-) -> dict[str, tuple[float, float]]:
-    """Returns {system: (finish_rate, scheduler_us_per_request)}."""
-    lm = lm or LM
-    rs = generate_requests(
-        apps,
-        lm,
-        slo_scale=slo_scale,
-        cfg=TraceConfig(n_requests=n_requests, utilization=utilization, seed=seed),
-    )
-    warm = np.concatenate(list(rs.app_history.values()))
-    out = {}
-    for name in systems:
-        if name == "orloj":
-            sched = OrlojScheduler(lm, initial_dists=rs.initial_dists())
-        else:
-            cls = {
-                "clockwork": ClockworkScheduler,
-                "nexus": NexusScheduler,
-                "clipper": ClipperScheduler,
-            }[name]
-            sched = cls(lm, init_samples=warm)
-        reqs = rs.fresh()
-        t0 = time.perf_counter()
-        res = simulate(reqs, sched, ModelExecutor(lm))
-        wall = time.perf_counter() - t0
-        out[name] = (res.finish_rate, wall / n_requests * 1e6)
-    return out
+from repro.eval.runner import run_specs
+from repro.eval.spec import ExperimentResult, ExperimentSpec
 
 
 def emit(rows: list[str]) -> None:
@@ -66,8 +19,18 @@ def emit(rows: list[str]) -> None:
         print(r, flush=True)
 
 
-def case_rows(table: str, case: str, slo: float, result) -> list[str]:
-    return [
-        f"{table}/{case}/slo{slo:g}/{sys},{us:.1f},finish_rate={fr:.3f}"
-        for sys, (fr, us) in result.items()
-    ]
+def legacy_rows(results: list[ExperimentResult]) -> list[str]:
+    """``name,us_per_call,derived`` rows; the name is the spec's tag."""
+    rows = []
+    for r in results:
+        derived = f"finish_rate={r.finish_rate:.3f}"
+        # Pool sweeps always report utilization (the legacy cluster rows
+        # did so even for the 1-replica anchor).
+        if r.spec.n_workers > 1 or r.spec.tag.startswith("cluster"):
+            derived += f";util={r.utilization:.2f}"
+        rows.append(f"{r.spec.tag},{r.sched_us_per_request:.1f},{derived}")
+    return rows
+
+
+def run_and_emit(specs: list[ExperimentSpec]) -> None:
+    emit(legacy_rows(run_specs(specs)))

@@ -1,74 +1,31 @@
 """Fig. 13 (sensitivity to the anticipated-delay parameter b) and
-Fig. 14 (scheduling overhead: shrinking minimum execution times)."""
+Fig. 14 (scheduling overhead: shrinking minimum execution times) — thin
+wrappers over the :mod:`repro.eval.grid` spec constructors."""
 
 from __future__ import annotations
 
-import numpy as np
+from repro.eval import grid
+from repro.eval.runner import run_specs
 
-from repro.core import (
-    BatchLatencyModel,
-    ModelExecutor,
-    OrlojScheduler,
-    SchedulerConfig,
-    simulate,
-)
-from repro.serving.trace import TraceConfig, generate_requests
-from repro.serving.workload import k_modal
-
-from .common import LM
+from .common import emit, run_and_emit
 
 
 def fig13_b_sweep(full: bool = False) -> None:
     """Finish rate as b varies 1e-6..1e-1 on the three-modal workload."""
-    bs = (1e-6, 1e-5, 1e-4, 1e-3, 1e-2, 1e-1)
-    slos = (2.0, 3.0, 5.0) if not full else (1.5, 2.0, 3.0, 4.0, 5.0)
-    apps = k_modal(3)
-    for slo in slos:
-        rs = generate_requests(
-            apps, LM, slo_scale=slo, cfg=TraceConfig(n_requests=1_000, seed=3)
-        )
-        for b in bs:
-            sched = OrlojScheduler(
-                LM,
-                cfg=SchedulerConfig(b=b),
-                initial_dists=rs.initial_dists(),
-            )
-            res = simulate(rs.fresh(), sched, ModelExecutor(LM))
-            print(
-                f"fig13/slo{slo:g}/b{b:g},0,finish_rate={res.finish_rate:.3f}",
-                flush=True,
-            )
+    run_and_emit(grid.fig13(full))
 
 
 def fig14_min_exec(full: bool = False) -> None:
     """Scale the whole execution-time distribution down until ORLOJ's
-    scheduling overhead (estimates, milestones) bites."""
-    scales = (1.0, 0.5, 0.25, 0.1, 0.05) if not full else (1.0, 0.5, 0.25, 0.1, 0.075, 0.05, 0.025)
-    for scale in scales:
-        lm = BatchLatencyModel(c0=25.0 * scale, c1=1.0)
-        apps = [
-            type(a)(a.app_id, _scaled(a.sampler, scale), a.weight)
-            for a in k_modal(3)
-        ]
-        for slo in (1.5, 3.0, 5.0):
-            rs = generate_requests(
-                apps, lm, slo_scale=slo, cfg=TraceConfig(n_requests=800, seed=4)
-            )
-            sched = OrlojScheduler(lm, initial_dists=rs.initial_dists())
-            # charge the *measured* scheduler decision time to the virtual
-            # clock — the whole point of the Fig.-14 overhead study
-            res = simulate(
-                rs.fresh(), sched, ModelExecutor(lm), charge_scheduler_overhead=True
-            )
-            p99 = rs.p99_alone
-            print(
-                f"fig14/p99-{p99:.1f}ms/slo{slo:g},0,finish_rate={res.finish_rate:.3f}",
-                flush=True,
-            )
-
-
-def _scaled(sampler, scale):
-    def f(rng, n):
-        return sampler(rng, n) * scale
-
-    return f
+    scheduling overhead (estimates, milestones) bites.  These specs run
+    with ``charge_overhead=True``: the measured scheduler decision time is
+    billed to the virtual clock — the point of the Fig.-14 study.  The row
+    name carries the scaled set's measured P99, so it is formatted from
+    the result, not the spec tag."""
+    for r in run_specs(grid.fig14(full)):
+        emit(
+            [
+                f"fig14/p99-{r.p99_alone_ms:.1f}ms/slo{r.spec.slo_scale:g},"
+                f"{r.sched_us_per_request:.1f},finish_rate={r.finish_rate:.3f}"
+            ]
+        )

@@ -1,76 +1,32 @@
-"""Paper-table reproductions (Tables 2–5 / Figs. 3, 8–10, 11)."""
+"""Paper-table reproductions (Tables 2–5 / Figs. 3, 8–10, 11) — thin
+formatting wrappers over the :mod:`repro.eval.grid` spec constructors."""
 
 from __future__ import annotations
 
-from repro.serving.workload import (
-    bimodal,
-    k_modal,
-    real_task,
-    static,
-    unequal_bimodal,
-    REAL_TASKS,
-)
+from repro.eval import grid
 
-from .common import case_rows, emit, run_case
-
-SLOS_FULL = (1.5, 2.0, 3.0, 4.0, 5.0)
-SLOS_FAST = (1.5, 3.0, 5.0)
+from .common import run_and_emit
 
 
 def table2_bimodal_std(full: bool = False) -> None:
     """Table 2: bimodal request distributions with varying per-peak std."""
-    slos = SLOS_FULL if full else SLOS_FAST
-    cases = {
-        "std-0.5": bimodal(0.5),
-        "std-1": bimodal(1.0),
-        "std-2": bimodal(2.0),
-        "std-2/0.5": bimodal((2.0, 0.5)),
-        "std-0.5/2": bimodal((0.5, 2.0)),
-    }
-    for case, apps in cases.items():
-        for slo in slos:
-            emit(case_rows("table2", case, slo, run_case(apps, slo)))
+    run_and_emit(grid.table2(full))
 
 
 def table3_modality(full: bool = False) -> None:
     """Table 3 / Fig. 8: one- to eight-modal distributions."""
-    slos = SLOS_FULL if full else SLOS_FAST
-    ks = range(1, 9) if full else (1, 2, 3, 5, 8)
-    for k in ks:
-        for slo in slos:
-            emit(case_rows("table3", f"{k}-modal", slo, run_case(k_modal(k), slo)))
+    run_and_emit(grid.table3(full))
 
 
 def fig9_unequal_peaks(full: bool = False) -> None:
-    slos = SLOS_FULL if full else SLOS_FAST
-    for case in ("short", "long"):
-        for slo in slos:
-            emit(
-                case_rows(
-                    "fig9", f"more-{case}", slo, run_case(unequal_bimodal(case), slo)
-                )
-            )
+    run_and_emit(grid.fig9(full))
 
 
 def table4_static(full: bool = False) -> None:
     """Table 4 / Fig. 11: static models (no execution-time variance)."""
-    slos = SLOS_FULL if full else SLOS_FAST
-    for case, mean in (("inception", 12.0), ("resnet", 7.0)):
-        for slo in slos:
-            emit(
-                case_rows(
-                    "table4",
-                    case,
-                    slo,
-                    run_case(static(mean), slo, utilization=0.7),
-                )
-            )
+    run_and_emit(grid.table4(full))
 
 
 def table5_real_tasks(full: bool = False) -> None:
     """Table 5: real model/dataset pairs fitted from published mean/P99."""
-    slos = SLOS_FULL if full else SLOS_FAST
-    names = list(REAL_TASKS) if full else ["gpt-cornell", "bart-cnn", "skipnet-imagenet", "rdinet-cifar"]
-    for name in names:
-        for slo in slos:
-            emit(case_rows("table5", name, slo, run_case(real_task(name), slo)))
+    run_and_emit(grid.table5(full))

@@ -15,6 +15,7 @@ The paper's primary contribution (Yu et al., 2022) as a composable library:
 """
 
 from .baselines import (
+    BASELINES,
     ClipperScheduler,
     ClockworkScheduler,
     EDFScheduler,
@@ -61,6 +62,7 @@ __all__ = [
     "Batch",
     "OrlojScheduler",
     "SchedulerConfig",
+    "BASELINES",
     "ClipperScheduler",
     "ClockworkScheduler",
     "EDFScheduler",

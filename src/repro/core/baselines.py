@@ -33,6 +33,7 @@ from .request import Request
 from .scheduler import Batch
 
 __all__ = [
+    "BASELINES",
     "ClockworkScheduler",
     "NexusScheduler",
     "ClipperScheduler",
@@ -363,3 +364,13 @@ class EDFScheduler(_BaselineBase):
     @property
     def n_pending(self) -> int:
         return len(self._pending)
+
+
+# name -> class, for harnesses that select compared systems by name (the
+# ``repro.eval`` grid runner, ``benchmarks/common.py``).  Every entry shares
+# the ``on_arrival(s)`` / ``next_batch`` / ``on_batch_done`` protocol and the
+# ``(latency_model, init_samples=...)`` constructor shape.
+BASELINES: dict[str, type[_BaselineBase]] = {
+    cls.name: cls
+    for cls in (ClockworkScheduler, NexusScheduler, ClipperScheduler, EDFScheduler)
+}

@@ -107,6 +107,17 @@ class SimResult:
     latencies: np.ndarray
     n_workers: int = 1
     peak_heap_size: int = 0  # high-water mark of the event heap
+    # Measured wall-clock spent inside scheduler hooks (``on_arrival(s)``,
+    # ``next_batch``, ``on_batch_done``), separated from the simulation's
+    # own bookkeeping so per-request overhead columns charge the scheduler
+    # for its decisions only — not for the event loop that replays them.
+    sched_time_ms: float = 0.0
+    n_decisions: int = 0  # number of ``next_batch`` calls
+
+    @property
+    def sched_us_per_request(self) -> float:
+        """Scheduler decision time per request (µs) — the overhead column."""
+        return self.sched_time_ms * 1e3 / max(1, self.n_total)
 
     @property
     def finish_rate(self) -> float:
@@ -336,6 +347,8 @@ def run_event_loop(
 
     peak_heap = len(events)
     worker_busy_time = 0.0
+    sched_time = 0.0  # wall-clock seconds inside scheduler hooks
+    n_decisions = 0
     last_time = 0.0
     inflight: list[tuple[float, float] | None] = [None] * n  # (start, end)
     # At most one *live* WAKE per worker (re-armed only for an earlier
@@ -343,15 +356,16 @@ def run_event_loop(
     pending_wake: list[float | None] = [None] * n
 
     def try_dispatch(w: int, now: float) -> None:
-        nonlocal worker_busy_time, peak_heap
+        nonlocal worker_busy_time, peak_heap, sched_time, n_decisions
         if pool.busy[w]:
             return
         worker = workers[w]
         t0 = _time.perf_counter()
         batch, wake = worker.scheduler.next_batch(now)
-        overhead = (
-            (_time.perf_counter() - t0) * 1e3 if charge_scheduler_overhead else 0.0
-        )
+        dt = _time.perf_counter() - t0
+        sched_time += dt
+        n_decisions += 1
+        overhead = dt * 1e3 if charge_scheduler_overhead else 0.0
         if batch is not None:
             start = now + overhead
             dur = worker.executor(batch, start)
@@ -416,26 +430,32 @@ def run_event_loop(
                     buffered.setdefault(w, []).append(req)
                     pool.pending_offset[w] += 1
                 else:
+                    t0 = _time.perf_counter()
                     workers[w].scheduler.on_arrival(req, now)
+                    sched_time += _time.perf_counter() - t0
                     try_dispatch(w, now)
             for w, group in buffered.items():
                 pool.pending_offset[w] = 0
                 sched = workers[w].scheduler
                 deliver = getattr(sched, "on_arrivals", None)
+                t0 = _time.perf_counter()
                 if deliver is not None:
                     deliver(group, now)
                 else:
                     for req in group:
                         sched.on_arrival(req, now)
+                sched_time += _time.perf_counter() - t0
         elif kind == _DONE:
             w, batch = payload
             pool.busy[w] = False
             inflight[w] = None
             for r in batch.requests:
                 r.finished = now
+            t0 = _time.perf_counter()
             workers[w].scheduler.on_batch_done(
                 batch, now, [r.true_time for r in batch.requests]
             )
+            sched_time += _time.perf_counter() - t0
             try_dispatch(w, now)
         else:  # _WAKE
             w = payload
@@ -461,6 +481,8 @@ def run_event_loop(
         latencies=lat,
         n_workers=n,
         peak_heap_size=peak_heap,
+        sched_time_ms=sched_time * 1e3,
+        n_decisions=n_decisions,
     )
 
 

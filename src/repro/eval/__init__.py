@@ -1,0 +1,55 @@
+"""``repro.eval`` — the typed evaluation subsystem (§5 methodology as code).
+
+Promotes the print-CSV benchmarks into a structured pipeline:
+
+- :mod:`repro.eval.spec` — :class:`ExperimentSpec` (one grid cell: workload
+  family, SLO scale, utilization, seed, system, pool shape) and
+  :class:`ExperimentResult`, both JSON round-trippable;
+- :mod:`repro.eval.workloads` — JSON-addressable workload families;
+- :mod:`repro.eval.grid` — the conformance grids (``tiny``/``small``/
+  ``full``) plus spec constructors for every legacy benchmark table;
+- :mod:`repro.eval.runner` — seeded per-cell replay, process fan-out,
+  the ``BENCH_eval.json`` artifact;
+- :mod:`repro.eval.claims` — the paper-claims conformance gate;
+- :mod:`repro.eval.run` — ``python -m repro.eval.run --grid small``.
+"""
+
+from .claims import (
+    MONO_SLACK,
+    STATIC_NOISE_BAND,
+    TIGHT_SLO_MAX,
+    ClaimResult,
+    evaluate_claims,
+    format_report,
+)
+from .grid import GRIDS, SYSTEMS
+from .runner import (
+    DEFAULT_ARTIFACT,
+    read_artifact,
+    run_spec,
+    run_specs,
+    write_artifact,
+)
+from .spec import TIMING_FIELDS, ExperimentResult, ExperimentSpec
+from .workloads import FAMILIES, build_workload
+
+__all__ = [
+    "MONO_SLACK",
+    "STATIC_NOISE_BAND",
+    "TIGHT_SLO_MAX",
+    "ClaimResult",
+    "evaluate_claims",
+    "format_report",
+    "GRIDS",
+    "SYSTEMS",
+    "DEFAULT_ARTIFACT",
+    "read_artifact",
+    "run_spec",
+    "run_specs",
+    "write_artifact",
+    "TIMING_FIELDS",
+    "ExperimentResult",
+    "ExperimentSpec",
+    "FAMILIES",
+    "build_workload",
+]

@@ -1,0 +1,241 @@
+"""Paper-claims conformance gates over an experiment result set.
+
+The paper's core quantitative claim (Tables 2-5, Figs. 8-9) is an
+*ordering*: under tight SLOs on high-variance workloads ORLOJ finishes
+more requests than Clockwork/Nexus/Clipper, while staying comparable on
+static workloads.  Absolute finish rates depend on hardware constants and
+trace scaling, so the gate checks the orderings, not the magnitudes:
+
+- ``tight-slo-dominance`` — on every dynamic workload case at SLO scale
+  <= 2.0, ORLOJ's seed-averaged finish rate >= every baseline's (strict:
+  no tolerance — the observed margins are the evidence, and they are
+  reported per cell);
+- ``static-parity`` — on static workloads ORLOJ is within
+  :data:`STATIC_NOISE_BAND` of the best baseline (on no-variance
+  workloads all systems degenerate to near-identical batching; the band
+  covers batching-order noise, sized from the observed seed-to-seed
+  spread, ~1.5x the per-system std of 0.05);
+- ``slo-monotonicity`` — relaxing the SLO never *costs* a system more
+  than :data:`MONO_SLACK` finish rate (sanity: the grid is measuring SLO
+  pressure, not an artifact).
+
+Aggregation is a plain mean over the grid's seeds, grouped per experiment
+(workload case, utilization, n_requests, SLO scale, system) so cells from
+different sweeps are never averaged together; every simulation is
+deterministic, so a claim's verdict is reproducible bit-for-bit.  Claims
+only look at single-worker, default-config cells — ablation and
+sensitivity sweeps (``sched_cfg``, ``time_scale``, overhead charging,
+pools) are excluded.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+from collections import defaultdict
+from typing import Any, Iterable, Mapping, Sequence
+
+from .spec import ExperimentResult, ExperimentSpec
+from .workloads import DYNAMIC_FAMILIES
+
+__all__ = [
+    "STATIC_NOISE_BAND",
+    "MONO_SLACK",
+    "TIGHT_SLO_MAX",
+    "ClaimResult",
+    "evaluate_claims",
+    "format_report",
+]
+
+# Documented gate constants (DESIGN.md §7).
+TIGHT_SLO_MAX = 2.0  # "tight SLO" = scale <= 2.0 x P99
+STATIC_NOISE_BAND = 0.08  # parity band on static workloads
+MONO_SLACK = 0.05  # tolerated finish-rate dip when relaxing the SLO
+
+
+@dataclasses.dataclass(frozen=True)
+class ClaimResult:
+    name: str
+    description: str
+    passed: bool
+    margin: float  # worst-case slack; negative iff the claim failed
+    cells: tuple[str, ...]  # per-cell evidence lines
+
+    def to_dict(self) -> dict[str, Any]:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: Mapping[str, Any]) -> "ClaimResult":
+        return cls(
+            name=d["name"],
+            description=d["description"],
+            passed=d["passed"],
+            margin=d["margin"],
+            cells=tuple(d["cells"]),
+        )
+
+
+def _case_label(spec: ExperimentSpec) -> str:
+    """Grouping key for seed averaging.  Includes the load parameters
+    (utilization, n_requests) so cells from different sweeps — e.g. a
+    combined small-grid + legacy-table result set — are never averaged
+    into one mean as if they measured the same experiment."""
+    params = json.dumps(spec.workload_params, sort_keys=True)
+    return f"{spec.workload}{params}@u{spec.utilization:g}/n{spec.n_requests}"
+
+
+def _eligible(r: ExperimentResult) -> bool:
+    s = r.spec
+    return (
+        s.n_workers == 1
+        and not s.sched_cfg
+        and not s.charge_overhead
+        and s.time_scale == 1.0
+        and not s.hetero
+    )
+
+
+def _seed_means(
+    results: Iterable[ExperimentResult],
+) -> dict[tuple[str, str, float, str], float]:
+    """(case, family, slo, system) -> finish rate averaged over seeds."""
+    acc: dict[tuple, list[float]] = defaultdict(list)
+    for r in results:
+        if _eligible(r):
+            key = (_case_label(r.spec), r.spec.workload, r.spec.slo_scale, r.spec.system)
+            acc[key].append(r.finish_rate)
+    return {k: sum(v) / len(v) for k, v in acc.items()}
+
+
+def _fail(name: str, description: str, why: str) -> ClaimResult:
+    # Finite sentinel margin: finish-rate margins live in [-1, 1], and
+    # -inf would serialize as the non-standard JSON token ``-Infinity``.
+    return ClaimResult(name, description, False, -1.0, (why,))
+
+
+def claim_tight_slo_dominance(
+    results: Sequence[ExperimentResult], max_slo: float = TIGHT_SLO_MAX
+) -> ClaimResult:
+    desc = (
+        f"ORLOJ's seed-mean finish rate >= every baseline's on each dynamic "
+        f"workload at SLO scale <= {max_slo:g}"
+    )
+    means = _seed_means(results)
+    by_cell: dict[tuple[str, float], dict[str, float]] = defaultdict(dict)
+    for (case, family, slo, system), fr in means.items():
+        if family in DYNAMIC_FAMILIES and slo <= max_slo:
+            by_cell[(case, slo)][system] = fr
+    cells, worst = [], float("inf")
+    for (case, slo), per_sys in sorted(by_cell.items()):
+        if "orloj" not in per_sys or len(per_sys) < 2:
+            continue
+        orloj = per_sys["orloj"]
+        for system, fr in sorted(per_sys.items()):
+            if system == "orloj":
+                continue
+            margin = orloj - fr
+            worst = min(worst, margin)
+            cells.append(
+                f"{case}@slo{slo:g}: orloj {orloj:.3f} vs {system} {fr:.3f} "
+                f"({margin:+.3f})"
+            )
+    if not cells:
+        return _fail(
+            "tight-slo-dominance", desc, "no eligible dynamic cells at tight SLO"
+        )
+    return ClaimResult("tight-slo-dominance", desc, worst >= 0.0, worst, tuple(cells))
+
+
+def claim_static_parity(
+    results: Sequence[ExperimentResult], band: float = STATIC_NOISE_BAND
+) -> ClaimResult:
+    desc = (
+        f"ORLOJ within {band:g} of the best baseline's seed-mean finish rate "
+        f"on static workloads"
+    )
+    means = _seed_means(results)
+    by_cell: dict[tuple[str, float], dict[str, float]] = defaultdict(dict)
+    for (case, family, slo, system), fr in means.items():
+        if family == "static":
+            by_cell[(case, slo)][system] = fr
+    cells, worst = [], float("inf")
+    for (case, slo), per_sys in sorted(by_cell.items()):
+        if "orloj" not in per_sys or len(per_sys) < 2:
+            continue
+        orloj = per_sys["orloj"]
+        best_sys, best = max(
+            ((s, fr) for s, fr in per_sys.items() if s != "orloj"),
+            key=lambda kv: kv[1],
+        )
+        margin = band + (orloj - best)
+        worst = min(worst, margin)
+        cells.append(
+            f"{case}@slo{slo:g}: orloj {orloj:.3f}, best baseline {best_sys} "
+            f"{best:.3f} (gap {orloj - best:+.3f}, band {band:g})"
+        )
+    if not cells:
+        return _fail("static-parity", desc, "no eligible static cells")
+    return ClaimResult("static-parity", desc, worst >= 0.0, worst, tuple(cells))
+
+
+def claim_slo_monotonicity(
+    results: Sequence[ExperimentResult], slack: float = MONO_SLACK
+) -> ClaimResult:
+    desc = (
+        f"per system and workload, relaxing the SLO never drops the seed-mean "
+        f"finish rate by more than {slack:g}"
+    )
+    means = _seed_means(results)
+    by_series: dict[tuple[str, str], list[tuple[float, float]]] = defaultdict(list)
+    for (case, family, slo, system), fr in means.items():
+        by_series[(case, system)].append((slo, fr))
+    cells, worst = [], float("inf")
+    for (case, system), pts in sorted(by_series.items()):
+        pts.sort()
+        if len(pts) < 2:
+            continue
+        for (slo_a, fr_a), (slo_b, fr_b) in zip(pts, pts[1:]):
+            margin = fr_b - fr_a + slack
+            worst = min(worst, margin)
+            if margin < 0.0:
+                cells.append(
+                    f"{case}/{system}: slo{slo_a:g}->{slo_b:g} fell "
+                    f"{fr_a:.3f}->{fr_b:.3f} (dip {fr_a - fr_b:.3f} > {slack:g})"
+                )
+        cells.append(
+            f"{case}/{system}: "
+            + " -> ".join(f"{fr:.3f}@{slo:g}" for slo, fr in pts)
+        )
+    if worst == float("inf"):
+        return _fail("slo-monotonicity", desc, "no series with >= 2 SLO scales")
+    return ClaimResult("slo-monotonicity", desc, worst >= 0.0, worst, tuple(cells))
+
+
+def evaluate_claims(
+    results: Sequence[ExperimentResult],
+    *,
+    tight_slo_max: float = TIGHT_SLO_MAX,
+    static_band: float = STATIC_NOISE_BAND,
+    mono_slack: float = MONO_SLACK,
+) -> list[ClaimResult]:
+    return [
+        claim_tight_slo_dominance(results, tight_slo_max),
+        claim_static_parity(results, static_band),
+        claim_slo_monotonicity(results, mono_slack),
+    ]
+
+
+def format_report(claims: Sequence[ClaimResult], verbose: bool = False) -> str:
+    lines = []
+    for c in claims:
+        status = "PASS" if c.passed else "FAIL"
+        lines.append(f"[{status}] {c.name} (worst margin {c.margin:+.3f})")
+        lines.append(f"       {c.description}")
+        # Evidence lines: always on failure, on request otherwise.
+        if verbose or not c.passed:
+            for cell in c.cells:
+                lines.append(f"         {cell}")
+    ok = all(c.passed for c in claims)
+    lines.append(f"conformance: {'PASS' if ok else 'FAIL'} "
+                 f"({sum(c.passed for c in claims)}/{len(claims)} claims)")
+    return "\n".join(lines)

@@ -1,0 +1,310 @@
+"""Experiment grids: the conformance grids (``tiny``/``small``/``full``)
+plus spec constructors for every legacy ``benchmarks/`` table and figure.
+
+The conformance grids cross {workload case} x {SLO scale} x {seed} x
+{system} and are what the claims layer (:mod:`repro.eval.claims`)
+evaluates.  SLO scales are chosen where the repro's orderings are
+*reproducible*: tight scales (1.25, 1.5) for the dominance claim and a
+loose anchor (3.0) for the monotonicity claim.  Intermediate scales
+(≈2×P99) are deliberately absent from the gated grids — there Nexus's
+fixed-batch plan is genuinely competitive in this repro and the gate does
+not assert an ordering the code does not reproduce (see DESIGN.md §7).
+
+The ``tableN``/``figN``/``cluster`` constructors mirror the historical
+benchmark sweeps cell-for-cell; ``benchmarks/*.py`` are thin formatters
+over them.
+"""
+
+from __future__ import annotations
+
+from .spec import ExperimentSpec
+
+__all__ = ["GRIDS", "SYSTEMS", "tiny", "small", "full"]
+
+# Every compared system, ORLOJ first (the paper's Tables 2-5 set plus the
+# EDF ablation from core/baselines.py).
+SYSTEMS = ("orloj", "clockwork", "nexus", "clipper", "edf")
+
+# name -> (family, params, utilization) of the gated workload cases.
+_SMALL_CASES = (
+    ("bimodal", "bimodal", {"std": 1.0}, 0.85),
+    ("3-modal", "k_modal", {"k": 3}, 0.85),
+    ("static", "static", {"mean": 12.0}, 0.7),
+)
+_SMALL_SLOS = (1.25, 1.5, 3.0)
+_SMALL_SEEDS = (7, 11, 23, 31, 43)
+
+
+def _conformance(
+    cases, slos, seeds, n_requests: int, systems=SYSTEMS
+) -> list[ExperimentSpec]:
+    return [
+        ExperimentSpec(
+            workload=family,
+            workload_params=dict(params),
+            slo_scale=slo,
+            utilization=util,
+            n_requests=n_requests,
+            seed=seed,
+            system=system,
+            tag=f"eval/{case}/slo{slo:g}/{system}/s{seed}",
+        )
+        for case, family, params, util in cases
+        for slo in slos
+        for seed in seeds
+        for system in systems
+    ]
+
+
+def tiny() -> list[ExperimentSpec]:
+    """8 cells in seconds — CLI smoke and unit tests, not gate-worthy."""
+    return _conformance(
+        _SMALL_CASES[:1] + _SMALL_CASES[2:],
+        slos=(1.25, 3.0),
+        seeds=(7,),
+        n_requests=120,
+        systems=("orloj", "nexus"),
+    )
+
+
+def small() -> list[ExperimentSpec]:
+    """The CI conformance grid: 3 cases x 3 SLOs x 5 seeds x 5 systems at
+    n=300 (~1 min serial).  This is the grid the acceptance gate runs on."""
+    return _conformance(_SMALL_CASES, _SMALL_SLOS, _SMALL_SEEDS, n_requests=300)
+
+
+_FULL_CASES = (
+    ("bimodal-std0.5", "bimodal", {"std": 0.5}, 0.85),
+    ("bimodal", "bimodal", {"std": 1.0}, 0.85),
+    ("bimodal-std2", "bimodal", {"std": 2.0}, 0.85),
+    ("bimodal-std2/0.5", "bimodal", {"std": [2.0, 0.5]}, 0.85),
+    ("bimodal-std0.5/2", "bimodal", {"std": [0.5, 2.0]}, 0.85),
+    ("2-modal", "k_modal", {"k": 2}, 0.85),
+    ("3-modal", "k_modal", {"k": 3}, 0.85),
+    ("5-modal", "k_modal", {"k": 5}, 0.85),
+    ("8-modal", "k_modal", {"k": 8}, 0.85),
+    ("more-short", "unequal_bimodal", {"more": "short"}, 0.85),
+    ("more-long", "unequal_bimodal", {"more": "long"}, 0.85),
+    ("inception", "static", {"mean": 12.0}, 0.7),
+    ("resnet", "static", {"mean": 7.0}, 0.7),
+    ("gpt-cornell", "real", {"name": "gpt-cornell"}, 0.85),
+    ("bart-cnn", "real", {"name": "bart-cnn"}, 0.85),
+)
+
+
+def full() -> list[ExperimentSpec]:
+    """Paper-scale sweep (~900 cells at n=1200; use ``--jobs``)."""
+    return _conformance(
+        _FULL_CASES, slos=(1.25, 1.5, 3.0, 5.0), seeds=(7, 11, 23), n_requests=1200
+    )
+
+
+GRIDS = {"tiny": tiny, "small": small, "full": full}
+
+
+# --------------------------------------------------------------------------
+# Legacy benchmark sweeps (benchmarks/*.py), one constructor per table/fig.
+# ``tag`` is the full legacy CSV row name wherever it is spec-derivable.
+
+_SLOS_FULL = (1.5, 2.0, 3.0, 4.0, 5.0)
+_SLOS_FAST = (1.5, 3.0, 5.0)
+
+
+def _table_specs(
+    table: str,
+    cases: list[tuple[str, str, dict]],
+    slos,
+    *,
+    utilization: float = 0.85,
+    n_requests: int = 1200,
+    seed: int = 7,
+) -> list[ExperimentSpec]:
+    return [
+        ExperimentSpec(
+            workload=family,
+            workload_params=dict(params),
+            slo_scale=slo,
+            utilization=utilization,
+            n_requests=n_requests,
+            seed=seed,
+            system=system,
+            tag=f"{table}/{case}/slo{slo:g}/{system}",
+        )
+        for case, family, params in cases
+        for slo in slos
+        for system in SYSTEMS
+    ]
+
+
+def table2(full: bool = False) -> list[ExperimentSpec]:
+    """Table 2: bimodal request distributions with varying per-peak std."""
+    cases = [
+        ("std-0.5", "bimodal", {"std": 0.5}),
+        ("std-1", "bimodal", {"std": 1.0}),
+        ("std-2", "bimodal", {"std": 2.0}),
+        ("std-2/0.5", "bimodal", {"std": [2.0, 0.5]}),
+        ("std-0.5/2", "bimodal", {"std": [0.5, 2.0]}),
+    ]
+    return _table_specs("table2", cases, _SLOS_FULL if full else _SLOS_FAST)
+
+
+def table3(full: bool = False) -> list[ExperimentSpec]:
+    """Table 3 / Fig. 8: one- to eight-modal distributions."""
+    ks = range(1, 9) if full else (1, 2, 3, 5, 8)
+    cases = [(f"{k}-modal", "k_modal", {"k": k}) for k in ks]
+    return _table_specs("table3", cases, _SLOS_FULL if full else _SLOS_FAST)
+
+
+def fig9(full: bool = False) -> list[ExperimentSpec]:
+    cases = [
+        (f"more-{m}", "unequal_bimodal", {"more": m}) for m in ("short", "long")
+    ]
+    return _table_specs("fig9", cases, _SLOS_FULL if full else _SLOS_FAST)
+
+
+def table4(full: bool = False) -> list[ExperimentSpec]:
+    """Table 4 / Fig. 11: static models (no execution-time variance)."""
+    cases = [
+        ("inception", "static", {"mean": 12.0}),
+        ("resnet", "static", {"mean": 7.0}),
+    ]
+    return _table_specs(
+        "table4", cases, _SLOS_FULL if full else _SLOS_FAST, utilization=0.7
+    )
+
+
+def table5(full: bool = False) -> list[ExperimentSpec]:
+    """Table 5: real model/dataset pairs fitted from published mean/P99."""
+    from ..serving.workload import REAL_TASKS
+
+    names = (
+        list(REAL_TASKS)
+        if full
+        else ["gpt-cornell", "bart-cnn", "skipnet-imagenet", "rdinet-cifar"]
+    )
+    cases = [(name, "real", {"name": name}) for name in names]
+    return _table_specs("table5", cases, _SLOS_FULL if full else _SLOS_FAST)
+
+
+def ablation(full: bool = False) -> list[ExperimentSpec]:
+    variants = {
+        "base": {},
+        "paper-desc-order": {"bs_order": "paper_desc"},
+        "no-refine": {"refine_feasibility": False},
+        "bins-4": {"n_bins": 4},
+        "bins-32": {"n_bins": 32},
+    }
+    return [
+        ExperimentSpec(
+            workload="k_modal",
+            workload_params={"k": 3},
+            slo_scale=slo,
+            utilization=0.8,  # the legacy sweeps used TraceConfig's default
+            n_requests=1200,
+            seed=11,
+            system="orloj",
+            sched_cfg=dict(cfg),
+            tag=f"ablation/{name}/slo{slo:g}",
+        )
+        for name, cfg in variants.items()
+        for slo in (1.5, 3.0, 5.0)
+    ]
+
+
+def fig13(full: bool = False) -> list[ExperimentSpec]:
+    """Sensitivity to the anticipated-delay parameter b (3-modal)."""
+    bs = (1e-6, 1e-5, 1e-4, 1e-3, 1e-2, 1e-1)
+    slos = (1.5, 2.0, 3.0, 4.0, 5.0) if full else (2.0, 3.0, 5.0)
+    return [
+        ExperimentSpec(
+            workload="k_modal",
+            workload_params={"k": 3},
+            slo_scale=slo,
+            utilization=0.8,  # the legacy sweeps used TraceConfig's default
+            n_requests=1000,
+            seed=3,
+            system="orloj",
+            sched_cfg={"b": b},
+            tag=f"fig13/slo{slo:g}/b{b:g}",
+        )
+        for slo in slos
+        for b in bs
+    ]
+
+
+def fig14(full: bool = False) -> list[ExperimentSpec]:
+    """Shrink the execution-time scale until scheduling overhead bites.
+    ``tag`` is completed by the formatter (needs the measured P99)."""
+    scales = (
+        (1.0, 0.5, 0.25, 0.1, 0.075, 0.05, 0.025)
+        if full
+        else (1.0, 0.5, 0.25, 0.1, 0.05)
+    )
+    return [
+        ExperimentSpec(
+            workload="k_modal",
+            workload_params={"k": 3},
+            slo_scale=slo,
+            utilization=0.8,  # the legacy sweeps used TraceConfig's default
+            n_requests=800,
+            seed=4,
+            system="orloj",
+            lm_c0=25.0 * scale,
+            time_scale=scale,
+            charge_overhead=True,
+            tag=f"fig14/scale{scale:g}/slo{slo:g}",
+        )
+        for scale in scales
+        for slo in (1.5, 3.0, 5.0)
+    ]
+
+
+def cluster(full: bool = False) -> list[ExperimentSpec]:
+    """Scale-out: finish rate vs replica count and dispatch policy."""
+    from ..core.eventloop import DISPATCH_POLICIES
+
+    replicas = (1, 2, 4, 8) if full else (1, 2, 4)
+    n = 1500 if full else 800
+    return [
+        ExperimentSpec(
+            workload="bimodal",
+            workload_params={"std": 1.0},
+            slo_scale=3.0,
+            utilization=0.8 * k,  # offered load ~ 0.8 x k worker capacities
+            n_requests=n,
+            seed=13,
+            system="orloj",
+            n_workers=k,
+            policy=policy,
+            loop_seed=0,  # the pre-refactor simulate_cluster default
+            tag=f"cluster/{policy}/r{k}",
+        )
+        for k in replicas
+        for policy in DISPATCH_POLICIES
+    ]
+
+
+def cluster_hetero(full: bool = False) -> list[ExperimentSpec]:
+    """Mixed pool: half fast, half 2x-slow replicas (a slow replica is
+    worth half a fast one, hence the 0.8 x 3 offered load at k=4)."""
+    from ..core.eventloop import DISPATCH_POLICIES
+
+    k = 4
+    n = 1500 if full else 800
+    return [
+        ExperimentSpec(
+            workload="bimodal",
+            workload_params={"std": 1.0},
+            slo_scale=3.0,
+            utilization=0.8 * (k / 2 + k / 4),
+            n_requests=n,
+            seed=13,
+            system="orloj",
+            n_workers=k,
+            policy=policy,
+            hetero=True,
+            loop_seed=1,  # the pre-refactor cluster_hetero loop seed
+            tag=f"cluster_hetero/{policy}/r{k}",
+        )
+        for policy in DISPATCH_POLICIES
+    ]

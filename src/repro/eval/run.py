@@ -1,0 +1,57 @@
+"""Grid runner CLI: run a conformance grid, write ``BENCH_eval.json``,
+and gate on the paper's qualitative claims.
+
+    PYTHONPATH=src python -m repro.eval.run --grid small [--jobs N]
+        [--out BENCH_eval.json] [--no-gate] [--verbose]
+
+Exit status is 0 iff every conformance claim passed (or ``--no-gate``).
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+from .claims import evaluate_claims, format_report
+from .grid import GRIDS
+from .runner import DEFAULT_ARTIFACT, run_specs, write_artifact
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--grid", default="small", choices=sorted(GRIDS))
+    ap.add_argument(
+        "--jobs",
+        type=int,
+        default=0,
+        help="worker processes (0 = one per CPU, 1 = serial)",
+    )
+    ap.add_argument("--out", default=DEFAULT_ARTIFACT)
+    ap.add_argument(
+        "--no-gate",
+        action="store_true",
+        help="record claim verdicts in the artifact but always exit 0",
+    )
+    ap.add_argument(
+        "--verbose", action="store_true", help="print per-cell claim evidence"
+    )
+    args = ap.parse_args(argv)
+
+    specs = GRIDS[args.grid]()
+    t0 = time.time()
+    print(f"# grid {args.grid}: {len(specs)} cells, jobs={args.jobs or 'auto'}",
+          file=sys.stderr, flush=True)
+    results = run_specs(specs, jobs=args.jobs)
+    claims = evaluate_claims(results)
+    write_artifact(args.out, results, grid=args.grid, claims=claims)
+    print(f"# {len(results)} results -> {args.out} ({time.time() - t0:.1f}s)",
+          file=sys.stderr)
+    print(format_report(claims, verbose=args.verbose))
+    if args.no_gate:
+        return 0
+    return 0 if all(c.passed for c in claims) else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,166 @@
+"""Run experiment specs: one seeded replay per cell, processes fanned out.
+
+Every cell is self-contained — ``run_spec`` regenerates the request set
+from the spec's seed (bit-for-bit, see the replay-fairness test) and
+replays it through the unified event loop — so the grid parallelizes with
+no shared state: serial and parallel execution produce identical outcome
+fields.  ``write_artifact`` persists a result set as ``BENCH_eval.json``
+next to ``BENCH_sched.json``.
+"""
+
+from __future__ import annotations
+
+import json
+import multiprocessing
+import os
+import time
+from concurrent.futures import ProcessPoolExecutor
+from typing import Iterable, Sequence
+
+import numpy as np
+
+from ..core import (
+    BASELINES,
+    BatchLatencyModel,
+    ModelExecutor,
+    OrlojScheduler,
+    SchedulerConfig,
+    Worker,
+    run_event_loop,
+)
+from ..serving.trace import RequestSet, TraceConfig, generate_requests
+from .spec import ExperimentResult, ExperimentSpec
+from .workloads import build_workload
+
+__all__ = [
+    "run_spec",
+    "run_specs",
+    "write_artifact",
+    "read_artifact",
+    "DEFAULT_ARTIFACT",
+]
+
+DEFAULT_ARTIFACT = "BENCH_eval.json"
+
+
+def _make_scheduler(spec: ExperimentSpec, lm: BatchLatencyModel, rs: RequestSet):
+    if spec.system == "orloj":
+        cfg = SchedulerConfig(**spec.sched_cfg)
+        return OrlojScheduler(lm, cfg=cfg, initial_dists=rs.initial_dists())
+    try:
+        cls = BASELINES[spec.system]
+    except KeyError:
+        raise ValueError(
+            f"unknown system {spec.system!r}; known: "
+            f"{['orloj', *sorted(BASELINES)]}"
+        ) from None
+    # Baselines are warm-started from the same historical samples ORLOJ's
+    # initial distributions are built from (§5.2 fairness).
+    return cls(lm, init_samples=rs.warm_samples())
+
+
+def run_spec(spec: ExperimentSpec) -> ExperimentResult:
+    """Regenerate the spec's seeded request set and replay it once."""
+    t_wall = time.perf_counter()
+    lm = BatchLatencyModel(c0=spec.lm_c0, c1=spec.lm_c1)
+    apps = build_workload(spec.workload, spec.workload_params, spec.time_scale)
+    rs = generate_requests(
+        apps,
+        lm,
+        slo_scale=spec.slo_scale,
+        cfg=TraceConfig(
+            n_requests=spec.n_requests,
+            utilization=spec.utilization,
+            seed=spec.seed,
+        ),
+    )
+    slow_lm = BatchLatencyModel(c0=2.0 * spec.lm_c0, c1=2.0 * spec.lm_c1)
+    workers = []
+    for i in range(spec.n_workers):
+        # Heterogeneous pools: the back half of the pool is 2x slower.
+        wlm = slow_lm if (spec.hetero and i >= spec.n_workers // 2) else lm
+        workers.append(
+            Worker(_make_scheduler(spec, wlm, rs), ModelExecutor(wlm, seed=i))
+        )
+    res = run_event_loop(
+        rs.fresh(),
+        workers,
+        policy=spec.policy,
+        charge_scheduler_overhead=spec.charge_overhead,
+        seed=spec.seed if spec.loop_seed is None else spec.loop_seed,
+    )
+    lat = res.latencies
+    wall = time.perf_counter() - t_wall
+    return ExperimentResult(
+        spec=spec,
+        finish_rate=res.finish_rate,
+        n_total=res.n_total,
+        n_finished_ok=res.n_finished_ok,
+        n_finished_late=res.n_finished_late,
+        n_dropped=res.n_dropped,
+        n_unserved=res.n_unserved,
+        utilization=res.utilization,
+        makespan_ms=res.makespan,
+        p99_alone_ms=rs.p99_alone,
+        latency_p50_ms=float(np.quantile(lat, 0.5)) if len(lat) else 0.0,
+        latency_p99_ms=float(np.quantile(lat, 0.99)) if len(lat) else 0.0,
+        n_decisions=res.n_decisions,
+        sched_time_ms=res.sched_time_ms,
+        sched_us_per_request=res.sched_us_per_request,
+        wall_s=wall,
+    )
+
+
+def run_specs(
+    specs: Sequence[ExperimentSpec], jobs: int = 1
+) -> list[ExperimentResult]:
+    """Run a grid; results come back in spec order.
+
+    ``jobs > 1`` fans cells out over a process pool (each cell regenerates
+    its own request set, so there is nothing to share); ``jobs <= 0`` means
+    one process per CPU.
+    """
+    specs = list(specs)
+    if jobs <= 0:
+        jobs = os.cpu_count() or 1
+    if jobs == 1 or len(specs) <= 1:
+        return [run_spec(s) for s in specs]
+    chunk = max(1, len(specs) // (4 * jobs))
+    # Spawn, not fork: the host process may have JAX's threads running
+    # (e.g. under pytest after real-engine tests), and forking a
+    # multithreaded process can deadlock.  Workers only import numpy-level
+    # code, so the spawn import cost is small and paid once per worker.
+    ctx = multiprocessing.get_context("spawn")
+    with ProcessPoolExecutor(max_workers=jobs, mp_context=ctx) as pool:
+        return list(pool.map(run_spec, specs, chunksize=chunk))
+
+
+def write_artifact(
+    path: str,
+    results: Iterable[ExperimentResult],
+    grid: str = "",
+    claims: Sequence | None = None,
+) -> dict:
+    """Write the trajectory artifact (atomically) and return the document."""
+    results = list(results)
+    doc: dict = {
+        "schema": 1,
+        "grid": grid,
+        "n_results": len(results),
+        "results": [r.to_dict() for r in results],
+    }
+    if claims is not None:
+        doc["claims"] = [c.to_dict() for c in claims]
+        doc["passed"] = all(c.passed for c in claims)
+    tmp = f"{path}.tmp"
+    with open(tmp, "w") as f:
+        json.dump(doc, f, indent=1)
+        f.write("\n")
+    os.replace(tmp, path)
+    return doc
+
+
+def read_artifact(path: str) -> tuple[dict, list[ExperimentResult]]:
+    with open(path) as f:
+        doc = json.load(f)
+    return doc, [ExperimentResult.from_dict(d) for d in doc["results"]]

@@ -1,0 +1,103 @@
+"""Typed experiment grid cells: :class:`ExperimentSpec` in,
+:class:`ExperimentResult` out.
+
+A spec is the complete, JSON-serializable recipe for one simulated run:
+workload family + params, SLO scale, offered utilization, trace seed,
+compared system, pool shape, and the knobs the sensitivity/ablation
+studies sweep.  Everything a worker process needs to regenerate the seeded
+request set and replay it — no shared state, so a grid of specs fans out
+across processes trivially.
+
+Results split into *outcome* fields (deterministic given the spec — finish
+counts, utilization, latency quantiles) and *timing* fields (measured
+wall-clock — scheduler decision time, run wall time).  Determinism
+comparisons go through :meth:`ExperimentResult.stable_dict`, which drops
+the timing fields.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Mapping
+
+__all__ = ["ExperimentSpec", "ExperimentResult", "TIMING_FIELDS"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ExperimentSpec:
+    """One grid cell.  ``workload_params`` / ``sched_cfg`` are plain JSON
+    objects (lists instead of tuples) so a spec round-trips losslessly."""
+
+    workload: str  # family key in repro.eval.workloads.FAMILIES
+    slo_scale: float
+    workload_params: dict = dataclasses.field(default_factory=dict)
+    utilization: float = 0.85
+    n_requests: int = 300
+    seed: int = 0
+    system: str = "orloj"  # "orloj" or a repro.core.baselines.BASELINES key
+    n_workers: int = 1
+    policy: str = "round_robin"  # front-end dispatch for n_workers > 1
+    hetero: bool = False  # half the pool runs a 2x-slower latency model
+    sched_cfg: dict = dataclasses.field(default_factory=dict)  # orloj only
+    lm_c0: float = 25.0  # Eq.-3 batch latency model of the serving hardware
+    lm_c1: float = 1.0
+    time_scale: float = 1.0  # Fig. 14: shrink every alone-time uniformly
+    charge_overhead: bool = False  # bill decision time to the virtual clock
+    # Event-loop RNG seed (dispatch-policy tie-breaks/sampling).  None means
+    # "follow the trace seed"; the legacy cluster sweeps pin it separately.
+    loop_seed: int | None = None
+    tag: str = ""  # display label used by the legacy CSV formatters
+
+    def to_dict(self) -> dict[str, Any]:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: Mapping[str, Any]) -> "ExperimentSpec":
+        known = {f.name for f in dataclasses.fields(cls)}
+        return cls(**{k: v for k, v in d.items() if k in known})
+
+
+# Fields of ExperimentResult that carry measured wall-clock and therefore
+# legitimately differ between two runs of the same spec.
+TIMING_FIELDS = frozenset({"sched_time_ms", "sched_us_per_request", "wall_s"})
+
+
+@dataclasses.dataclass(frozen=True)
+class ExperimentResult:
+    spec: ExperimentSpec
+    # -- outcome (deterministic given the spec) -----------------------------
+    finish_rate: float
+    n_total: int
+    n_finished_ok: int
+    n_finished_late: int
+    n_dropped: int
+    n_unserved: int
+    utilization: float
+    makespan_ms: float
+    p99_alone_ms: float  # P99 of the set's alone-times (the SLO anchor)
+    latency_p50_ms: float
+    latency_p99_ms: float
+    n_decisions: int
+    # -- timing (machine-dependent) -----------------------------------------
+    sched_time_ms: float
+    sched_us_per_request: float
+    wall_s: float
+
+    def to_dict(self) -> dict[str, Any]:
+        d = dataclasses.asdict(self)
+        d["spec"] = self.spec.to_dict()
+        return d
+
+    @classmethod
+    def from_dict(cls, d: Mapping[str, Any]) -> "ExperimentResult":
+        known = {f.name for f in dataclasses.fields(cls)}
+        kw = {k: v for k, v in d.items() if k in known and k != "spec"}
+        return cls(spec=ExperimentSpec.from_dict(d["spec"]), **kw)
+
+    def stable_dict(self) -> dict[str, Any]:
+        """Everything two runs of the same spec must agree on bit-for-bit
+        (serial vs parallel execution included)."""
+        d = self.to_dict()
+        for k in TIMING_FIELDS:
+            d.pop(k, None)
+        return d

@@ -84,6 +84,27 @@ class RequestSet:
             for app, xs in self.app_history.items()
         }
 
+    def warm_samples(self) -> np.ndarray:
+        """All warm-up alone-times pooled — the ``init_samples`` the point-
+        estimator baselines are seeded with (the same historical data ORLOJ
+        gets as ``initial_dists``, §5.2 fairness)."""
+        return np.concatenate(list(self.app_history.values()))
+
+    def fingerprint(self) -> tuple:
+        """Bitwise-stable identity of the generated set (not of any run's
+        bookkeeping): same ``(apps, latency model, slo_scale, TraceConfig)``
+        must reproduce this exactly — the §5.2 same-request-set fairness
+        premise, enforced by the replay-fairness regression test."""
+        per_req = tuple(
+            (r.app_id, r.release, r.slo, r.true_time, r.cost, r.extra_deadlines)
+            for r in self.requests
+        )
+        history = tuple(
+            (app, self.app_history[app].tobytes())
+            for app in sorted(self.app_history)
+        )
+        return (per_req, self.p99_alone, history)
+
 
 def generate_requests(
     apps: Sequence[AppWorkload],

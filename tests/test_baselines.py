@@ -1,0 +1,167 @@
+"""First direct coverage of the baseline schedulers (core/baselines.py).
+
+Each test drives a baseline through its public simulator protocol only —
+``on_arrivals`` / ``next_batch`` / ``on_batch_done`` — and checks the
+behavior the paper characterises for that system (§2.3, §5):
+
+- Clockwork: a batch overrunning the predicted completion by more than the
+  action window makes the pre-committed next action fail (its requests are
+  dropped);
+- Nexus: the fixed batch size is replanned from the observed *mean* only
+  every ``replan_interval``;
+- Clipper: AIMD — an SLO-violating batch halves the cap, a compliant one
+  regrows it additively;
+- EDF: earliest-deadline-first service order, expired heads dropped.
+"""
+
+from __future__ import annotations
+
+from repro.core import BatchLatencyModel, Request
+from repro.core.baselines import (
+    BASELINES,
+    ClipperScheduler,
+    ClockworkScheduler,
+    EDFScheduler,
+    NexusScheduler,
+)
+
+LM = BatchLatencyModel(c0=10.0, c1=1.0)
+WARM = [10.0] * 8  # point estimators start at mean 10 -> est_batch(bs) = 10 + 10*bs
+
+
+def _req(release: float, slo: float, app: str = "a") -> Request:
+    return Request(app_id=app, release=release, slo=slo, true_time=10.0)
+
+
+def test_registry_covers_all_baselines():
+    assert set(BASELINES) == {"clockwork", "nexus", "clipper", "edf"}
+    for name, cls in BASELINES.items():
+        assert cls.name == name
+
+
+# -- Clockwork ---------------------------------------------------------------
+
+
+def test_clockwork_action_window_miss_drops_precommitted_batch():
+    sched = ClockworkScheduler(LM, init_samples=WARM, window_slack=10.0)
+    reqs = [_req(0.0, 100.0) for _ in range(6)]
+    sched.on_arrivals(reqs, 0.0)
+
+    batch, _ = sched.next_batch(0.0)
+    # est_batch(4) = 50 <= earliest deadline 100; 8 > 6 pending -> bs 4.
+    assert batch is not None and len(batch.requests) == 4
+    assert sched.n_pending == 2
+
+    # The worker finished far past the predicted completion (50) plus the
+    # action window (10): the pre-planned action is rejected and the batch
+    # it would have run fails (§2.3 "subsequent batch to fail").
+    batch2, _ = sched.next_batch(70.0)
+    assert batch2 is None
+    assert sched.n_pending == 0
+    assert sched.n_timed_out == 2
+    dropped = [r for r in reqs if r.dropped is not None]
+    assert len(dropped) == 2 and all(r.dropped == 70.0 for r in dropped)
+
+
+def test_clockwork_on_time_action_keeps_batch():
+    sched = ClockworkScheduler(LM, init_samples=WARM, window_slack=10.0)
+    reqs = [_req(0.0, 100.0) for _ in range(6)]
+    sched.on_arrivals(reqs, 0.0)
+    sched.next_batch(0.0)
+
+    # Within the window (predicted 50 + slack 10): the next action runs.
+    batch2, _ = sched.next_batch(55.0)
+    assert batch2 is not None and len(batch2.requests) == 2
+    assert sched.n_timed_out == 0
+    assert all(r.dropped is None for r in reqs)
+
+
+# -- Nexus -------------------------------------------------------------------
+
+
+def test_nexus_replans_fixed_batch_from_mean_at_interval():
+    sched = NexusScheduler(LM, init_samples=WARM, replan_interval=5_000.0)
+    slo = 100.0
+
+    # Plan from mean 10: squishy-bin rule 2*(10 + 10*bs) <= 100 -> bs=4.
+    sched.on_arrivals([_req(0.0, slo) for _ in range(4)], 0.0)
+    b1, _ = sched.next_batch(0.0)
+    assert b1 is not None and len(b1.requests) == 4
+
+    # Observations drop the mean to (8*10 + 32*2)/40 = 3.6, but the next
+    # arrival is inside the replan interval: the fixed plan must NOT move.
+    sched.on_batch_done(b1, 10.0, [2.0] * 32)
+    sched.on_arrivals([_req(1_000.0, slo) for _ in range(8)], 1_000.0)
+    b2, _ = sched.next_batch(1_000.0)
+    assert b2 is not None and len(b2.requests) == 4
+
+    # Past the interval the arrival triggers a replan from the new mean:
+    # 2*(10 + 8*3.6) = 77.6 <= 100 fits, 2*(10 + 16*3.6) doesn't -> bs=8.
+    sched.on_arrivals([_req(6_000.0, slo) for _ in range(8)], 6_000.0)
+    b3, _ = sched.next_batch(6_000.0)
+    assert b3 is not None and len(b3.requests) == 8
+
+
+def test_nexus_tight_slo_plans_smaller_batches():
+    # slo=100: 2*(10+10*bs) <= 100 -> bs <= 4; with mean 10 the plan is 4.
+    sched = NexusScheduler(LM, init_samples=WARM)
+    sched.on_arrivals([_req(0.0, 100.0) for _ in range(16)], 0.0)
+    batch, _ = sched.next_batch(0.0)
+    assert batch is not None and len(batch.requests) == 4
+
+
+# -- Clipper -----------------------------------------------------------------
+
+
+def test_clipper_aimd_shrinks_then_regrows_additively():
+    sched = ClipperScheduler(LM, init_samples=WARM)
+    slo = 200.0
+    sched.on_arrivals([_req(0.0, slo) for _ in range(40)], 0.0)
+
+    b1, _ = sched.next_batch(0.0)
+    assert b1 is not None and len(b1.requests) == 16  # cap starts at max bs
+
+    # SLO-violating batch execution latency -> multiplicative decrease.
+    b1.requests[0].started = 0.0
+    b1.requests[0].finished = 300.0  # duration 300 > slo 200
+    sched.on_batch_done(b1, 1.0, [10.0] * len(b1.requests))
+    b2, _ = sched.next_batch(1.0)
+    assert b2 is not None and len(b2.requests) == 8
+
+    # Compliant batch -> additive increase by one.
+    b2.requests[0].started = 1.0
+    b2.requests[0].finished = 101.0  # duration 100 < slo
+    sched.on_batch_done(b2, 2.0, [10.0] * len(b2.requests))
+    b3, _ = sched.next_batch(2.0)
+    assert b3 is not None and len(b3.requests) == 9
+
+
+# -- EDF ---------------------------------------------------------------------
+
+
+def test_edf_serves_earliest_deadline_first():
+    sched = EDFScheduler(LM, init_samples=WARM)
+    r_late = _req(0.0, 300.0)
+    r_soon = _req(0.0, 50.0)
+    r_mid = _req(0.0, 100.0)
+    sched.on_arrivals([r_late, r_soon, r_mid], 0.0)
+
+    # Earliest deadline 50 bounds the batch: est_batch(2)=30 fits, 4 > 3
+    # pending anyway -> the two earliest-deadline requests, in order.
+    batch, _ = sched.next_batch(0.0)
+    assert batch is not None
+    assert [r.rid for r in batch.requests] == [r_soon.rid, r_mid.rid]
+    assert sched.n_pending == 1
+
+
+def test_edf_drops_expired_head_and_counts_it():
+    sched = EDFScheduler(LM, init_samples=WARM)
+    r_dead = _req(0.0, 15.0)  # now + est_batch(1)=20 > 15 -> hopeless
+    r_live = _req(0.0, 200.0)
+    sched.on_arrivals([r_dead, r_live], 0.0)
+
+    batch, _ = sched.next_batch(0.0)
+    assert batch is not None and [r.rid for r in batch.requests] == [r_live.rid]
+    assert r_dead.dropped == 0.0
+    assert sched.n_timed_out == 1
+    assert sched.n_pending == 0

@@ -1,0 +1,236 @@
+"""The ``repro.eval`` subsystem: spec JSON round-trips, runner determinism
+(serial == parallel, run-to-run), the claims layer, and the CLI artifact."""
+
+from __future__ import annotations
+
+import json
+
+import pytest
+
+from repro.eval import (
+    ClaimResult,
+    ExperimentResult,
+    ExperimentSpec,
+    evaluate_claims,
+    read_artifact,
+    run_spec,
+    run_specs,
+    write_artifact,
+)
+from repro.eval.claims import (
+    claim_slo_monotonicity,
+    claim_static_parity,
+    claim_tight_slo_dominance,
+)
+from repro.eval.grid import GRIDS, SYSTEMS, small, tiny
+
+
+# -- specs -------------------------------------------------------------------
+
+
+def test_spec_json_round_trip():
+    spec = ExperimentSpec(
+        workload="bimodal",
+        workload_params={"std": [2.0, 0.5]},
+        slo_scale=1.5,
+        utilization=0.9,
+        n_requests=77,
+        seed=3,
+        system="nexus",
+        n_workers=2,
+        policy="p2c",
+        sched_cfg={"b": 1e-3},
+        tag="t",
+    )
+    blob = json.dumps(spec.to_dict())
+    assert ExperimentSpec.from_dict(json.loads(blob)) == spec
+
+
+def test_result_json_round_trip_and_stable_dict():
+    r = run_spec(
+        ExperimentSpec(workload="static", slo_scale=3.0, n_requests=60, seed=1)
+    )
+    blob = json.dumps(r.to_dict())
+    r2 = ExperimentResult.from_dict(json.loads(blob))
+    assert r2 == r
+    stable = r.stable_dict()
+    assert "finish_rate" in stable
+    for timing in ("sched_time_ms", "sched_us_per_request", "wall_s"):
+        assert timing not in stable
+
+
+def test_unknown_system_and_family_are_rejected():
+    with pytest.raises(ValueError, match="unknown system"):
+        run_spec(ExperimentSpec(workload="bimodal", slo_scale=2.0, system="nope"))
+    with pytest.raises(ValueError, match="unknown workload family"):
+        run_spec(ExperimentSpec(workload="nope", slo_scale=2.0))
+
+
+def test_grids_are_well_formed():
+    for name, build in GRIDS.items():
+        specs = build()
+        assert specs, name
+        assert len({s.tag for s in specs}) == len(specs)  # tags are unique
+    assert len(small()) == 3 * 3 * 5 * len(SYSTEMS)
+
+
+# -- runner determinism ------------------------------------------------------
+
+
+def _mini_grid() -> list[ExperimentSpec]:
+    return [
+        ExperimentSpec(
+            workload=fam,
+            workload_params=params,
+            slo_scale=slo,
+            n_requests=100,
+            seed=7,
+            system=system,
+        )
+        for fam, params in (("bimodal", {"std": 1.0}), ("static", {"mean": 12.0}))
+        for slo in (1.5, 3.0)
+        for system in ("orloj", "nexus")
+    ]
+
+
+def test_runner_is_deterministic_serial_and_parallel():
+    specs = _mini_grid()
+    serial_a = [r.stable_dict() for r in run_specs(specs, jobs=1)]
+    serial_b = [r.stable_dict() for r in run_specs(specs, jobs=1)]
+    assert serial_a == serial_b
+
+    parallel = [r.stable_dict() for r in run_specs(specs, jobs=2)]
+    assert parallel == serial_a  # same cells, same order, same outcomes
+
+
+def test_multi_worker_spec_runs_and_reports_pool():
+    r = run_spec(
+        ExperimentSpec(
+            workload="bimodal",
+            slo_scale=3.0,
+            utilization=1.6,
+            n_requests=120,
+            seed=13,
+            n_workers=2,
+            policy="p2c",
+        )
+    )
+    assert r.n_total == 120
+    assert 0.0 <= r.utilization <= 1.0
+
+
+# -- claims ------------------------------------------------------------------
+
+
+def _fake(
+    system: str,
+    finish_rate: float,
+    slo: float = 1.5,
+    family: str = "bimodal",
+    seed: int = 0,
+) -> ExperimentResult:
+    spec = ExperimentSpec(
+        workload=family,
+        workload_params={},
+        slo_scale=slo,
+        n_requests=100,
+        seed=seed,
+        system=system,
+    )
+    return ExperimentResult(
+        spec=spec,
+        finish_rate=finish_rate,
+        n_total=100,
+        n_finished_ok=int(100 * finish_rate),
+        n_finished_late=0,
+        n_dropped=0,
+        n_unserved=0,
+        utilization=0.5,
+        makespan_ms=1.0,
+        p99_alone_ms=1.0,
+        latency_p50_ms=1.0,
+        latency_p99_ms=1.0,
+        n_decisions=1,
+        sched_time_ms=0.0,
+        sched_us_per_request=0.0,
+        wall_s=0.0,
+    )
+
+
+def test_dominance_claim_passes_and_fails_on_seed_means():
+    # Seed-averaged: orloj mean 0.85 vs nexus mean 0.80 -> pass even though
+    # one seed loses.
+    results = [
+        _fake("orloj", 0.80, seed=0),
+        _fake("orloj", 0.90, seed=1),
+        _fake("nexus", 0.82, seed=0),
+        _fake("nexus", 0.78, seed=1),
+    ]
+    c = claim_tight_slo_dominance(results)
+    assert c.passed and c.margin == pytest.approx(0.05)
+
+    c2 = claim_tight_slo_dominance(results + [_fake("clipper", 0.95)])
+    assert not c2.passed and c2.margin == pytest.approx(-0.10)
+
+
+def test_dominance_claim_ignores_loose_slo_and_static_cells():
+    results = [
+        _fake("orloj", 0.5, slo=1.5),
+        _fake("nexus", 0.4, slo=1.5),
+        # Orloj loses at slo 3.0 and on static: neither is in scope.
+        _fake("orloj", 0.5, slo=3.0),
+        _fake("nexus", 0.9, slo=3.0),
+        _fake("orloj", 0.1, family="static"),
+        _fake("nexus", 0.9, family="static"),
+    ]
+    assert claim_tight_slo_dominance(results).passed
+
+
+def test_dominance_claim_fails_without_cells():
+    assert not claim_tight_slo_dominance([_fake("orloj", 0.9)]).passed
+
+
+def test_static_parity_band():
+    base = [_fake("orloj", 0.50, family="static"), _fake("nexus", 0.55, family="static")]
+    c = claim_static_parity(base, band=0.08)
+    assert c.passed and c.margin == pytest.approx(0.03)
+    c2 = claim_static_parity(
+        base + [_fake("clipper", 0.60, family="static")], band=0.08
+    )
+    assert not c2.passed and c2.margin == pytest.approx(-0.02)
+
+
+def test_monotonicity_slack():
+    ok = [_fake("orloj", 0.80, slo=1.5), _fake("orloj", 0.78, slo=3.0)]
+    assert claim_slo_monotonicity(ok, slack=0.05).passed
+    bad = [_fake("orloj", 0.80, slo=1.5), _fake("orloj", 0.70, slo=3.0)]
+    c = claim_slo_monotonicity(bad, slack=0.05)
+    assert not c.passed and c.margin == pytest.approx(-0.05)
+
+
+def test_claim_result_round_trips_via_artifact(tmp_path):
+    results = [_fake("orloj", 0.9), _fake("nexus", 0.8)]
+    claims = evaluate_claims(results)
+    path = tmp_path / "BENCH_eval.json"
+    doc = write_artifact(str(path), results, grid="unit", claims=claims)
+    assert doc["passed"] == all(c.passed for c in claims)
+
+    loaded, results2 = read_artifact(str(path))
+    assert [ExperimentResult.from_dict(d) for d in loaded["results"]] == results2
+    assert results2 == results
+    assert [ClaimResult.from_dict(d) for d in loaded["claims"]] == claims
+
+
+# -- CLI ---------------------------------------------------------------------
+
+
+def test_cli_tiny_grid_writes_artifact(tmp_path, monkeypatch):
+    from repro.eval.run import main
+
+    out = tmp_path / "BENCH_eval.json"
+    rc = main(["--grid", "tiny", "--jobs", "1", "--out", str(out), "--no-gate"])
+    assert rc == 0
+    doc, results = read_artifact(str(out))
+    assert doc["grid"] == "tiny"
+    assert len(results) == len(tiny())
+    assert "claims" in doc

@@ -1,0 +1,78 @@
+"""Coverage of the §3.2 long-term feedback loop (core/profiler.py):
+seed/observe ingestion with window eviction, the pickup cadence, and that
+a picked-up distribution reflects only in-window samples."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.profiler import OnlineProfiler, ProfilerConfig
+
+
+def _profiler(**kw) -> OnlineProfiler:
+    cfg = ProfilerConfig(**{"sample_rate": 1.0, "seed": 0, **kw})
+    return OnlineProfiler(cfg)
+
+
+def test_pickup_cadence_none_between_pickups():
+    p = _profiler(pickup_interval=100.0)
+    p.seed_history("a", [1.0, 2.0, 3.0, 4.0], now=0.0)
+
+    snap = p.maybe_pickup(0.0)
+    assert snap is not None and set(snap) == {"a"}
+
+    # Inside the interval: the scheduler keeps its copy.
+    assert p.maybe_pickup(50.0) is None
+    assert p.maybe_pickup(99.9) is None
+
+    # Past the interval with new data: a fresh snapshot dict.
+    p.observe("a", 5.0, now=60.0)
+    snap2 = p.maybe_pickup(150.0)
+    assert snap2 is not None and set(snap2) == {"a"}
+    assert snap2 is not snap and snap2["a"] is not snap["a"]
+
+    # Past the interval but nothing new observed: None (not a stale copy).
+    assert p.maybe_pickup(300.0) is None
+    # current() still serves the last snapshot.
+    assert set(p.current()) == {"a"}
+
+
+def test_observe_respects_sample_rate_zero():
+    p = _profiler(sample_rate=0.0, pickup_interval=0.0)
+    p.observe("a", 1.0, now=0.0)
+    assert p.maybe_pickup(1.0) is None  # nothing was ingested
+
+
+def test_pickup_needs_two_samples_per_app():
+    p = _profiler(pickup_interval=0.0)
+    p.seed_history("solo", [1.0], now=0.0)
+    assert p.maybe_pickup(0.0) is None  # one sample cannot make a histogram
+    p.observe("solo", 2.0, now=1.0)
+    snap = p.maybe_pickup(2.0)
+    assert snap is not None and set(snap) == {"solo"}
+
+
+def test_window_eviction_snapshot_reflects_only_in_window_samples():
+    p = _profiler(pickup_interval=0.0, memory_window=100.0)
+    p.seed_history("a", [10.0] * 20, now=0.0)
+    for _ in range(12):
+        p.observe("a", 2.0, now=1_000.0)
+
+    # Pickup at t=1000: the 20 stale samples (t=0 < cutoff 900) are evicted,
+    # so the distribution is built from the 12 fresh ones only.
+    snap = p.maybe_pickup(1_000.0)
+    assert snap is not None
+    dist = snap["a"]
+    assert abs(dist.mean() - 2.0) < 0.5
+    assert dist.hi < 10.0  # no mass anywhere near the stale value
+
+
+def test_window_eviction_keeps_a_floor_of_samples():
+    # All samples stale: eviction must keep >= 8 so the app never loses its
+    # distribution entirely (drift reset, not amnesia).
+    p = _profiler(pickup_interval=0.0, memory_window=100.0)
+    p.seed_history("a", [10.0] * 20, now=0.0)
+    p.observe("a", 10.0, now=0.0)  # mark dirty via the observe path too
+    snap = p.maybe_pickup(1_000_000.0)
+    assert snap is not None
+    assert abs(snap["a"].mean() - 10.0) < 0.5
