@@ -8,6 +8,7 @@ execution times feeding the online profiler.
 import numpy as np
 
 from repro.configs import get_config
+from repro.configs.orloj_gpt import SERVE_BATCH_SIZES, SERVE_BUCKETS
 from repro.core import EmpiricalDistribution, OrlojScheduler, SchedulerConfig
 from repro.core.baselines import ClockworkScheduler
 from repro.serving.engine import EngineConfig, ServingEngine
@@ -15,7 +16,7 @@ from repro.serving.engine import EngineConfig, ServingEngine
 
 def main() -> None:
     cfg = get_config("orloj_gpt").reduced(vocab_size=8192)
-    ecfg = EngineConfig(buckets=(32, 64, 128, 256), batch_sizes=(1, 2, 4, 8))
+    ecfg = EngineConfig(buckets=SERVE_BUCKETS, batch_sizes=SERVE_BATCH_SIZES)
     engine = ServingEngine(cfg, ecfg)
 
     print("profiling the Eq.-3 latency curve on this machine ...")

@@ -113,6 +113,10 @@ class SimResult:
     # for its decisions only — not for the event loop that replays them.
     sched_time_ms: float = 0.0
     n_decisions: int = 0  # number of ``next_batch`` calls
+    # Batches actually executed (DONE events inside the horizon).  The
+    # real-engine eval tier pairs this with the executor's measured-batch
+    # log to attribute predicted-vs-measured drift per executed batch.
+    n_batches: int = 0
 
     @property
     def sched_us_per_request(self) -> float:
@@ -349,6 +353,7 @@ def run_event_loop(
     worker_busy_time = 0.0
     sched_time = 0.0  # wall-clock seconds inside scheduler hooks
     n_decisions = 0
+    n_batches = 0
     last_time = 0.0
     inflight: list[tuple[float, float] | None] = [None] * n  # (start, end)
     # At most one *live* WAKE per worker (re-armed only for an earlier
@@ -449,6 +454,7 @@ def run_event_loop(
             w, batch = payload
             pool.busy[w] = False
             inflight[w] = None
+            n_batches += 1
             for r in batch.requests:
                 r.finished = now
             t0 = _time.perf_counter()
@@ -483,6 +489,7 @@ def run_event_loop(
         peak_heap_size=peak_heap,
         sched_time_ms=sched_time * 1e3,
         n_decisions=n_decisions,
+        n_batches=n_batches,
     )
 
 

@@ -1,5 +1,11 @@
-"""Experiment grids: the conformance grids (``tiny``/``small``/``full``)
-plus spec constructors for every legacy ``benchmarks/`` table and figure.
+"""Experiment grids: the conformance grids (``tiny``/``small``/``full``/
+``engine-smoke``) plus spec constructors for every legacy ``benchmarks/``
+table and figure.
+
+This is stage 1 of the grid-cell lifecycle (spec → seeded RequestSet →
+result → claim, see :mod:`repro.eval.spec`): a grid is nothing but a list
+of :class:`ExperimentSpec` values; everything downstream — request
+generation, replay, claims — is derived from them.
 
 The conformance grids cross {workload case} x {SLO scale} x {seed} x
 {system} and are what the claims layer (:mod:`repro.eval.claims`)
@@ -9,6 +15,14 @@ loose anchor (3.0) for the monotonicity claim.  Intermediate scales
 (≈2×P99) are deliberately absent from the gated grids — there Nexus's
 fixed-batch plan is genuinely competitive in this repro and the gate does
 not assert an ordering the code does not reproduce (see DESIGN.md §7).
+The small grid also carries a handful of heterogeneous pool cells feeding
+the scale-out dispatch claim (§3.1: jsq_work >= round_robin).
+
+``engine-smoke`` is the real-substrate tier: a few tiny
+``substrate="engine"`` cells that drive the actual JAX model through the
+same lifecycle (DESIGN.md §8).  It is tracked, not gated — engine finish
+rates are real measurements and CI-runner timing variance is not yet
+characterized.
 
 The ``tableN``/``figN``/``cluster`` constructors mirror the historical
 benchmark sweeps cell-for-cell; ``benchmarks/*.py`` are thin formatters
@@ -19,7 +33,7 @@ from __future__ import annotations
 
 from .spec import ExperimentSpec
 
-__all__ = ["GRIDS", "SYSTEMS", "tiny", "small", "full"]
+__all__ = ["GRIDS", "SYSTEMS", "tiny", "small", "full", "engine_smoke"]
 
 # Every compared system, ORLOJ first (the paper's Tables 2-5 set plus the
 # EDF ablation from core/baselines.py).
@@ -67,10 +81,38 @@ def tiny() -> list[ExperimentSpec]:
     )
 
 
+def _scaleout_cells() -> list[ExperimentSpec]:
+    """Pool cells feeding the scale-out dispatch claim: a 4-replica
+    heterogeneous pool (half the replicas 2x slower) under each compared
+    front-end policy.  Offered load is 0.8 x the pool's effective capacity
+    (2 fast + 2 half-speed replicas = 3 fast-worker equivalents)."""
+    return [
+        ExperimentSpec(
+            workload="bimodal",
+            workload_params={"std": 1.0},
+            slo_scale=3.0,
+            utilization=0.8 * 3,
+            n_requests=500,
+            seed=seed,
+            system="orloj",
+            n_workers=4,
+            policy=policy,
+            hetero=True,
+            tag=f"eval/pool-hetero/{policy}/s{seed}",
+        )
+        for policy in ("round_robin", "jsq_work")
+        for seed in (7, 11, 23)
+    ]
+
+
 def small() -> list[ExperimentSpec]:
     """The CI conformance grid: 3 cases x 3 SLOs x 5 seeds x 5 systems at
-    n=300 (~1 min serial).  This is the grid the acceptance gate runs on."""
-    return _conformance(_SMALL_CASES, _SMALL_SLOS, _SMALL_SEEDS, n_requests=300)
+    n=300 (~1 min serial), plus the scale-out pool cells.  This is the
+    grid the acceptance gate runs on."""
+    return (
+        _conformance(_SMALL_CASES, _SMALL_SLOS, _SMALL_SEEDS, n_requests=300)
+        + _scaleout_cells()
+    )
 
 
 _FULL_CASES = (
@@ -99,7 +141,35 @@ def full() -> list[ExperimentSpec]:
     )
 
 
-GRIDS = {"tiny": tiny, "small": small, "full": full}
+def engine_smoke() -> list[ExperimentSpec]:
+    """The real-substrate tier: 4 tiny ``substrate="engine"`` cells that
+    serve the bimodal case through the toy ``orloj_gpt`` JAX model —
+    ORLOJ vs Nexus at a tight and a loose SLO.  Minutes on CPU (model
+    init + per-shape XLA compilation dominate; the cells themselves are
+    cheap).  Tracked, not gated: see DESIGN.md §8."""
+    return [
+        ExperimentSpec(
+            workload="bimodal",
+            workload_params={"std": 1.0},
+            slo_scale=slo,
+            utilization=0.6,
+            n_requests=48,
+            seed=7,
+            system=system,
+            substrate="engine",
+            tag=f"engine/bimodal/slo{slo:g}/{system}/s7",
+        )
+        for slo in (1.5, 5.0)
+        for system in ("orloj", "nexus")
+    ]
+
+
+GRIDS = {
+    "tiny": tiny,
+    "small": small,
+    "full": full,
+    "engine-smoke": engine_smoke,
+}
 
 
 # --------------------------------------------------------------------------

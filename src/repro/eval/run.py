@@ -1,10 +1,15 @@
 """Grid runner CLI: run a conformance grid, write ``BENCH_eval.json``,
 and gate on the paper's qualitative claims.
 
-    PYTHONPATH=src python -m repro.eval.run --grid small [--jobs N]
-        [--out BENCH_eval.json] [--no-gate] [--verbose]
+    PYTHONPATH=src python -m repro.eval.run --grid small|full|engine-smoke
+        [--jobs N] [--out BENCH_eval.json] [--no-gate] [--verbose]
 
-Exit status is 0 iff every conformance claim passed (or ``--no-gate``).
+Exit status is 0 iff every conformance claim passed, with two exceptions:
+``--no-gate`` always exits 0, and *ungated* grids (``engine-smoke``) are
+tracked rather than failed — their claim verdicts and the sim-vs-engine
+``engine_drift`` section are recorded in the artifact, but real-substrate
+finish rates are measurements and CI-runner timing variance is not yet
+characterized (DESIGN.md §8).
 """
 
 from __future__ import annotations
@@ -16,6 +21,10 @@ import time
 from .claims import evaluate_claims, format_report
 from .grid import GRIDS
 from .runner import DEFAULT_ARTIFACT, run_specs, write_artifact
+from .substrate import drift_report
+
+# Grids whose claim verdicts are recorded but never fail the exit status.
+UNGATED_GRIDS = frozenset({"engine-smoke"})
 
 
 def main(argv: list[str] | None = None) -> int:
@@ -25,7 +34,8 @@ def main(argv: list[str] | None = None) -> int:
         "--jobs",
         type=int,
         default=0,
-        help="worker processes (0 = one per CPU, 1 = serial)",
+        help="worker processes (0 = one per CPU, 1 = serial); engine cells "
+        "always run serially in the host process",
     )
     ap.add_argument("--out", default=DEFAULT_ARTIFACT)
     ap.add_argument(
@@ -44,11 +54,24 @@ def main(argv: list[str] | None = None) -> int:
           file=sys.stderr, flush=True)
     results = run_specs(specs, jobs=args.jobs)
     claims = evaluate_claims(results)
-    write_artifact(args.out, results, grid=args.grid, claims=claims)
+    drift = drift_report(results)
+    extra = {"engine_drift": drift} if drift else None
+    write_artifact(args.out, results, grid=args.grid, claims=claims, extra=extra)
     print(f"# {len(results)} results -> {args.out} ({time.time() - t0:.1f}s)",
           file=sys.stderr)
     print(format_report(claims, verbose=args.verbose))
+    if drift:
+        print(
+            f"engine drift: {drift['n_cells']} cells, "
+            f"|finish-rate drift| mean {drift['mean_abs_finish_rate_drift']:.3f} "
+            f"max {drift['max_abs_finish_rate_drift']:.3f}, "
+            f"batch-time MAPE {drift['mean_batch_mape']:.3f}"
+        )
     if args.no_gate:
+        return 0
+    if args.grid in UNGATED_GRIDS:
+        print(f"# grid {args.grid!r} is tracked, not gated (DESIGN.md §8)",
+              file=sys.stderr)
         return 0
     return 0 if all(c.passed for c in claims) else 1
 

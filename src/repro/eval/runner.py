@@ -1,11 +1,22 @@
 """Run experiment specs: one seeded replay per cell, processes fanned out.
 
-Every cell is self-contained — ``run_spec`` regenerates the request set
-from the spec's seed (bit-for-bit, see the replay-fairness test) and
-replays it through the unified event loop — so the grid parallelizes with
-no shared state: serial and parallel execution produce identical outcome
-fields.  ``write_artifact`` persists a result set as ``BENCH_eval.json``
-next to ``BENCH_sched.json``.
+This is stage 2 of the grid-cell lifecycle (spec → seeded RequestSet →
+result → claim, see :mod:`repro.eval.spec`).  Every cell is
+self-contained — ``run_spec`` regenerates the request set from the spec's
+seed (bit-for-bit, see the replay-fairness test) and replays it through
+the unified event loop — so the grid parallelizes with no shared state:
+serial and parallel execution produce identical outcome fields.
+
+Substrates: ``substrate="sim"`` cells replay against the Eq.-3
+:class:`~repro.core.eventloop.ModelExecutor` and fan out over a process
+pool.  ``substrate="engine"`` cells (:mod:`repro.eval.substrate`) run the
+real JAX engine and always execute serially in the host process — the
+engine's model parameters, compiled programs and profiled latency curve
+are cached per process, and re-paying model init + XLA compilation in
+every pool worker would dwarf the cells themselves.
+
+``write_artifact`` persists a result set as ``BENCH_eval.json`` next to
+``BENCH_sched.json``.
 """
 
 from __future__ import annotations
@@ -43,9 +54,21 @@ __all__ = [
 DEFAULT_ARTIFACT = "BENCH_eval.json"
 
 
-def _make_scheduler(spec: ExperimentSpec, lm: BatchLatencyModel, rs: RequestSet):
+def _make_scheduler(
+    spec: ExperimentSpec,
+    lm: BatchLatencyModel,
+    rs: RequestSet,
+    batch_sizes: tuple[int, ...] | None = None,
+):
+    """Instantiate the spec's scheduler.  ``batch_sizes`` pins the
+    supported batch grid (the engine substrate passes its executor's
+    supported sizes so the scheduler never plans an unservable batch);
+    an explicit ``sched_cfg`` entry still wins."""
     if spec.system == "orloj":
-        cfg = SchedulerConfig(**spec.sched_cfg)
+        cfg_kw = dict(spec.sched_cfg)
+        if batch_sizes is not None:
+            cfg_kw.setdefault("batch_sizes", tuple(batch_sizes))
+        cfg = SchedulerConfig(**cfg_kw)
         return OrlojScheduler(lm, cfg=cfg, initial_dists=rs.initial_dists())
     try:
         cls = BASELINES[spec.system]
@@ -54,43 +77,55 @@ def _make_scheduler(spec: ExperimentSpec, lm: BatchLatencyModel, rs: RequestSet)
             f"unknown system {spec.system!r}; known: "
             f"{['orloj', *sorted(BASELINES)]}"
         ) from None
+    kw = {} if batch_sizes is None else {"batch_sizes": tuple(batch_sizes)}
     # Baselines are warm-started from the same historical samples ORLOJ's
     # initial distributions are built from (§5.2 fairness).
-    return cls(lm, init_samples=rs.warm_samples())
+    return cls(lm, init_samples=rs.warm_samples(), **kw)
 
 
-def run_spec(spec: ExperimentSpec) -> ExperimentResult:
-    """Regenerate the spec's seeded request set and replay it once."""
-    t_wall = time.perf_counter()
-    lm = BatchLatencyModel(c0=spec.lm_c0, c1=spec.lm_c1)
-    apps = build_workload(spec.workload, spec.workload_params, spec.time_scale)
-    rs = generate_requests(
-        apps,
-        lm,
-        slo_scale=spec.slo_scale,
-        cfg=TraceConfig(
-            n_requests=spec.n_requests,
-            utilization=spec.utilization,
-            seed=spec.seed,
-        ),
-    )
-    slow_lm = BatchLatencyModel(c0=2.0 * spec.lm_c0, c1=2.0 * spec.lm_c1)
+def _slow_lm(lm: BatchLatencyModel) -> BatchLatencyModel:
+    """The heterogeneous-pool convention, shared by both substrates: the
+    back half of the pool runs a 2x-slower latency curve (and, on the
+    engine substrate, a 2x-scaled executor)."""
+    return BatchLatencyModel(c0=2.0 * lm.c0, c1=2.0 * lm.c1)
+
+
+def _build_pool(
+    spec: ExperimentSpec,
+    lm: BatchLatencyModel,
+    rs: RequestSet,
+    executor_for,
+    batch_sizes: tuple[int, ...] | None = None,
+) -> list[Worker]:
+    """Assemble the spec's worker pool — the one place the heterogeneous
+    convention (back half of the pool 2x slower) lives, shared by the sim
+    substrate, the engine substrate and its sim twin.  ``executor_for(i,
+    wlm, slow)`` supplies each replica's executor."""
+    slow = _slow_lm(lm)
     workers = []
     for i in range(spec.n_workers):
-        # Heterogeneous pools: the back half of the pool is 2x slower.
-        wlm = slow_lm if (spec.hetero and i >= spec.n_workers // 2) else lm
+        is_slow = spec.hetero and i >= spec.n_workers // 2
+        wlm = slow if is_slow else lm
         workers.append(
-            Worker(_make_scheduler(spec, wlm, rs), ModelExecutor(wlm, seed=i))
+            Worker(
+                _make_scheduler(spec, wlm, rs, batch_sizes=batch_sizes),
+                executor_for(i, wlm, is_slow),
+            )
         )
-    res = run_event_loop(
-        rs.fresh(),
-        workers,
-        policy=spec.policy,
-        charge_scheduler_overhead=spec.charge_overhead,
-        seed=spec.seed if spec.loop_seed is None else spec.loop_seed,
-    )
+    return workers
+
+
+def _fold_result(
+    spec: ExperimentSpec,
+    rs: RequestSet,
+    res,
+    wall_s: float,
+    substrate_meta: dict | None = None,
+) -> ExperimentResult:
+    """Fold one replay's :class:`~repro.core.eventloop.SimResult` into the
+    :class:`ExperimentResult` schema — the single mapping both substrates
+    go through, so engine and sim results can never diverge field-wise."""
     lat = res.latencies
-    wall = time.perf_counter() - t_wall
     return ExperimentResult(
         spec=spec,
         finish_rate=res.finish_rate,
@@ -107,8 +142,42 @@ def run_spec(spec: ExperimentSpec) -> ExperimentResult:
         n_decisions=res.n_decisions,
         sched_time_ms=res.sched_time_ms,
         sched_us_per_request=res.sched_us_per_request,
-        wall_s=wall,
+        wall_s=wall_s,
+        substrate_meta=substrate_meta or {},
     )
+
+
+def run_spec(spec: ExperimentSpec) -> ExperimentResult:
+    """Regenerate the spec's seeded request set and replay it once (on the
+    spec's substrate)."""
+    if spec.substrate != "sim":
+        # Deferred import: the engine substrate pulls in the JAX model
+        # stack only when an engine cell actually runs, so sim-only
+        # environments (the bare-env CI job) never touch it.
+        from .substrate import run_engine_spec
+
+        return run_engine_spec(spec)
+    t_wall = time.perf_counter()
+    lm = BatchLatencyModel(c0=spec.lm_c0, c1=spec.lm_c1)
+    apps = build_workload(spec.workload, spec.workload_params, spec.time_scale)
+    rs = generate_requests(
+        apps,
+        lm,
+        slo_scale=spec.slo_scale,
+        cfg=TraceConfig(
+            n_requests=spec.n_requests,
+            utilization=spec.utilization,
+            seed=spec.seed,
+        ),
+    )
+    res = run_event_loop(
+        rs.fresh(),
+        _build_pool(spec, lm, rs, lambda i, wlm, slow: ModelExecutor(wlm, seed=i)),
+        policy=spec.policy,
+        charge_scheduler_overhead=spec.charge_overhead,
+        seed=spec.seed if spec.loop_seed is None else spec.loop_seed,
+    )
+    return _fold_result(spec, rs, res, time.perf_counter() - t_wall)
 
 
 def run_specs(
@@ -123,16 +192,31 @@ def run_specs(
     specs = list(specs)
     if jobs <= 0:
         jobs = os.cpu_count() or 1
-    if jobs == 1 or len(specs) <= 1:
+    # Engine cells always run serially in the host process: the engine's
+    # compiled programs and profiled latency curve are cached per process,
+    # and every pool worker would re-pay model init + XLA compilation.
+    sim_idx = [i for i, s in enumerate(specs) if s.substrate == "sim"]
+    if jobs == 1 or len(sim_idx) <= 1:
         return [run_spec(s) for s in specs]
-    chunk = max(1, len(specs) // (4 * jobs))
+    results: list[ExperimentResult | None] = [None] * len(specs)
+    chunk = max(1, len(sim_idx) // (4 * jobs))
     # Spawn, not fork: the host process may have JAX's threads running
     # (e.g. under pytest after real-engine tests), and forking a
     # multithreaded process can deadlock.  Workers only import numpy-level
     # code, so the spawn import cost is small and paid once per worker.
     ctx = multiprocessing.get_context("spawn")
     with ProcessPoolExecutor(max_workers=jobs, mp_context=ctx) as pool:
-        return list(pool.map(run_spec, specs, chunksize=chunk))
+        sim_results = pool.map(
+            run_spec, [specs[i] for i in sim_idx], chunksize=chunk
+        )
+        # Engine cells run in the host while the pool churns through the
+        # sim cells: mixed grids cost max(sim, engine) wall, not the sum.
+        for i, s in enumerate(specs):
+            if s.substrate != "sim":
+                results[i] = run_spec(s)
+        for i, r in zip(sim_idx, sim_results):
+            results[i] = r
+    return results  # type: ignore[return-value]
 
 
 def write_artifact(
@@ -140,8 +224,12 @@ def write_artifact(
     results: Iterable[ExperimentResult],
     grid: str = "",
     claims: Sequence | None = None,
+    extra: dict | None = None,
 ) -> dict:
-    """Write the trajectory artifact (atomically) and return the document."""
+    """Write the trajectory artifact (atomically) and return the document.
+
+    ``extra`` merges additional top-level sections into the document (e.g.
+    the ``engine_drift`` report of an engine-substrate grid)."""
     results = list(results)
     doc: dict = {
         "schema": 1,
@@ -152,6 +240,15 @@ def write_artifact(
     if claims is not None:
         doc["claims"] = [c.to_dict() for c in claims]
         doc["passed"] = all(c.passed for c in claims)
+    if extra:
+        reserved = {"schema", "grid", "n_results", "results", "claims", "passed"}
+        clash = reserved & extra.keys()
+        if clash:
+            raise ValueError(
+                f"extra sections would overwrite reserved artifact keys: "
+                f"{sorted(clash)}"
+            )
+        doc.update(extra)
     tmp = f"{path}.tmp"
     with open(tmp, "w") as f:
         json.dump(doc, f, indent=1)

@@ -1,0 +1,91 @@
+"""CI regression gate over the ``BENCH_sched.json`` scheduler-throughput
+artifact (ROADMAP "BENCH_sched.json regression gate" item).
+
+``benchmarks/queue_micro.py::sched_throughput`` measures arrival-path
+throughput and ``next_batch`` latency at 10²/10³/10⁴ pending and writes
+them to ``BENCH_sched.json``.  This gate compares a freshly measured
+artifact against the committed baseline and fails CI when the hot path
+regresses beyond a *loose* ratio band — 3× by default, because absolute
+rates swing widely across shared CI runners (DESIGN.md §8 documents the
+band; tighten it once runner variance is characterized).
+
+    # regenerate BENCH_sched.json in place, then compare to the committed one
+    cp BENCH_sched.json /tmp/sched_baseline.json
+    python -m benchmarks.run --only sched
+    python -m repro.eval.sched_gate --baseline /tmp/sched_baseline.json
+
+Checked per pending-count size: ``vectorized_arrivals_per_s`` must not
+fall below ``baseline / max_ratio`` and ``next_batch_us`` must not exceed
+``baseline * max_ratio``.  Speedup-vs-scalar ratios are *not* gated (both
+paths slow down together on a loaded runner, so the ratio is stable but
+uninformative about regressions).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import Mapping
+
+__all__ = ["check", "main"]
+
+DEFAULT_MAX_RATIO = 3.0
+
+
+def check(
+    baseline: Mapping, fresh: Mapping, max_ratio: float = DEFAULT_MAX_RATIO
+) -> list[str]:
+    """Compare two ``BENCH_sched.json`` documents; returns failure lines
+    (empty = gate passes)."""
+    if max_ratio < 1.0:
+        raise ValueError(f"max_ratio must be >= 1, got {max_ratio}")
+    fails: list[str] = []
+    base_sizes = baseline.get("sizes") or {}
+    fresh_sizes = fresh.get("sizes") or {}
+    if not base_sizes:
+        return ["baseline artifact has no 'sizes' section"]
+    for size, base in sorted(base_sizes.items(), key=lambda kv: int(kv[0])):
+        cur = fresh_sizes.get(size)
+        if cur is None:
+            fails.append(f"n={size}: missing from the fresh artifact")
+            continue
+        b, f = base["vectorized_arrivals_per_s"], cur["vectorized_arrivals_per_s"]
+        if f * max_ratio < b:
+            fails.append(
+                f"n={size}: arrival throughput {f:.0f}/s is more than "
+                f"{max_ratio:g}x below the baseline {b:.0f}/s"
+            )
+        b_us, f_us = base["next_batch_us"], cur["next_batch_us"]
+        if f_us > b_us * max_ratio:
+            fails.append(
+                f"n={size}: next_batch latency {f_us:.0f}us is more than "
+                f"{max_ratio:g}x above the baseline {b_us:.0f}us"
+            )
+    return fails
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--baseline", required=True,
+                    help="committed BENCH_sched.json to gate against")
+    ap.add_argument("--fresh", default="BENCH_sched.json",
+                    help="freshly measured artifact (default: BENCH_sched.json)")
+    ap.add_argument("--max-ratio", type=float, default=DEFAULT_MAX_RATIO,
+                    help="tolerated regression ratio (default %(default)s)")
+    args = ap.parse_args(argv)
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+    with open(args.fresh) as f:
+        fresh = json.load(f)
+    fails = check(baseline, fresh, args.max_ratio)
+    for line in fails:
+        print(f"FAIL {line}", file=sys.stderr)
+    status = "FAIL" if fails else "PASS"
+    print(f"sched gate: {status} ({args.fresh} vs {args.baseline}, "
+          f"band {args.max_ratio:g}x)")
+    return 1 if fails else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,18 +1,43 @@
 """Typed experiment grid cells: :class:`ExperimentSpec` in,
 :class:`ExperimentResult` out.
 
-A spec is the complete, JSON-serializable recipe for one simulated run:
+A spec is the complete, JSON-serializable recipe for one run:
 workload family + params, SLO scale, offered utilization, trace seed,
-compared system, pool shape, and the knobs the sensitivity/ablation
-studies sweep.  Everything a worker process needs to regenerate the seeded
-request set and replay it — no shared state, so a grid of specs fans out
-across processes trivially.
+compared system, pool shape, execution substrate, and the knobs the
+sensitivity/ablation studies sweep.  Everything a worker process needs to
+regenerate the seeded request set and replay it — no shared state, so a
+grid of specs fans out across processes trivially.
 
-Results split into *outcome* fields (deterministic given the spec — finish
-counts, utilization, latency quantiles) and *timing* fields (measured
-wall-clock — scheduler decision time, run wall time).  Determinism
-comparisons go through :meth:`ExperimentResult.stable_dict`, which drops
-the timing fields.
+**Grid-cell lifecycle** (the contract every module in ``repro.eval``
+implements one stage of):
+
+1. a grid constructor (:mod:`repro.eval.grid`) builds a list of specs;
+2. the runner (:mod:`repro.eval.runner`) regenerates each spec's *seeded*
+   :class:`~repro.serving.trace.RequestSet` — bit-for-bit reproducible
+   from ``(workload, workload_params, slo_scale, utilization, n_requests,
+   seed)`` — and replays it through the unified event loop on the spec's
+   ``substrate``;
+3. the replay folds into an :class:`ExperimentResult` (same schema for
+   both substrates);
+4. the claims layer (:mod:`repro.eval.claims`) aggregates results into
+   paper-claim verdicts, and ``repro.eval.run`` persists everything as
+   ``BENCH_eval.json``.
+
+``substrate`` selects the execution layer under the replay: ``"sim"``
+(default) uses the Eq.-3 :class:`~repro.core.eventloop.ModelExecutor`;
+``"engine"`` (optionally ``"engine:<model>"``, see
+:mod:`repro.eval.substrate`) drives the real JAX
+:class:`~repro.serving.engine.ServingEngine` with measured batch times.
+
+Results split into *outcome* fields (deterministic given the spec on the
+``sim`` substrate — finish counts, utilization, latency quantiles) and
+*timing* fields (measured wall-clock — scheduler decision time, run wall
+time).  Determinism comparisons go through
+:meth:`ExperimentResult.stable_dict`, which drops the timing fields.  On
+the ``engine`` substrate the outcome fields are real measurements and
+therefore machine-dependent; engine provenance (profiled constants,
+predicted-vs-measured drift, the finish set) travels in
+``substrate_meta``, which is likewise excluded from stable comparisons.
 """
 
 from __future__ import annotations
@@ -35,6 +60,10 @@ class ExperimentSpec:
     n_requests: int = 300
     seed: int = 0
     system: str = "orloj"  # "orloj" or a repro.core.baselines.BASELINES key
+    # Execution layer: "sim" replays against the Eq.-3 ModelExecutor;
+    # "engine" (or "engine:<registry model>") drives the real JAX
+    # ServingEngine with measured batch times (repro.eval.substrate).
+    substrate: str = "sim"
     n_workers: int = 1
     policy: str = "round_robin"  # front-end dispatch for n_workers > 1
     hetero: bool = False  # half the pool runs a 2x-slower latency model
@@ -57,9 +86,12 @@ class ExperimentSpec:
         return cls(**{k: v for k, v in d.items() if k in known})
 
 
-# Fields of ExperimentResult that carry measured wall-clock and therefore
-# legitimately differ between two runs of the same spec.
-TIMING_FIELDS = frozenset({"sched_time_ms", "sched_us_per_request", "wall_s"})
+# Fields of ExperimentResult that carry measured wall-clock (or, for
+# ``substrate_meta``, profiled hardware constants and measured drift) and
+# therefore legitimately differ between two runs of the same spec.
+TIMING_FIELDS = frozenset(
+    {"sched_time_ms", "sched_us_per_request", "wall_s", "substrate_meta"}
+)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -82,6 +114,10 @@ class ExperimentResult:
     sched_time_ms: float
     sched_us_per_request: float
     wall_s: float
+    # Engine-substrate provenance (empty for sim cells): registry model,
+    # profiled Eq.-3 constants, predicted-vs-measured batch-time drift, the
+    # sim-twin comparison and the finish set (repro.eval.substrate).
+    substrate_meta: dict = dataclasses.field(default_factory=dict)
 
     def to_dict(self) -> dict[str, Any]:
         d = dataclasses.asdict(self)

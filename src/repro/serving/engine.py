@@ -14,6 +14,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
+from collections import deque
 from typing import Callable, Sequence
 
 import jax
@@ -26,6 +27,7 @@ from ..core.request import Request
 from ..core.scheduler import Batch
 from ..models import Model, ModelConfig
 from .batcher import make_padded_batch, padded_batch_size
+from .trace import offered_rate
 
 __all__ = ["EngineConfig", "JaxExecutor", "ServingEngine"]
 
@@ -39,7 +41,18 @@ class EngineConfig:
 
 class JaxExecutor:
     """Executor for the simulator loop that runs the real model and returns
-    the *measured* batch execution time (ms)."""
+    the *measured* batch execution time (ms).
+
+    Every served batch is appended to :attr:`measured` as ``(padded_k,
+    bucket, measured_ms)`` — the executed shape plus its wall-clock — so
+    callers (the real-engine eval tier) can attribute predicted-vs-measured
+    drift per batch.  Profiling calls go through :meth:`_run` directly and
+    are *not* logged.  The log is a bounded ring (:data:`MEASURED_LOG_CAP`
+    most recent batches) so callers that never read it — long-running
+    serving processes, the examples — cannot leak memory; use
+    :meth:`drain_measured` to read-and-reset it around one serving run."""
+
+    MEASURED_LOG_CAP = 4096
 
     def __init__(self, model: Model, params, cfg: EngineConfig):
         self.model = model
@@ -49,6 +62,15 @@ class JaxExecutor:
             lambda p, batch: self.model.logits(p, batch),
         )
         self._compiled: set[tuple[int, int]] = set()
+        self.measured: deque[tuple[int, int, float]] = deque(
+            maxlen=self.MEASURED_LOG_CAP
+        )
+
+    def drain_measured(self) -> list[tuple[int, int, float]]:
+        """Return the ``(padded_k, bucket, measured_ms)`` log and reset it."""
+        out = list(self.measured)
+        self.measured.clear()
+        return out
 
     def padded_batch_size(self, k: int) -> int:
         return padded_batch_size(k, self.cfg.batch_sizes)
@@ -79,19 +101,55 @@ class JaxExecutor:
         # Admission (make_requests) caps lengths at the largest bucket, so
         # overflow here is a programming error — fail loudly.
         padded = make_padded_batch(batch.requests, self.cfg.buckets, overflow="error")
-        ms, _ = self._run(padded.tokens)
+        ms, k_pad = self._run(padded.tokens)
+        self.measured.append((k_pad, padded.labels_bucket, ms))
         return ms
+
+
+@dataclasses.dataclass
+class _ScaledExecutor:
+    """A replica whose hardware is ``scale``× slower than the measured
+    backend: the shared executor runs the batch for real, and the measured
+    duration is scaled before it reaches the virtual clock.  This is how a
+    heterogeneous pool is modelled on one physical backend — accounting is
+    still anchored to a real measurement per batch."""
+
+    inner: JaxExecutor
+    scale: float
+
+    def __call__(self, batch: Batch, now: float) -> float:
+        return self.scale * self.inner(batch, now)
 
 
 class ServingEngine:
     """Profiles the model's Eq.-3 latency curve, generates length-driven
-    requests, and runs any scheduler against real execution."""
+    requests, and runs any scheduler against real execution.
+
+    **Determinism contract** (the seed hooks the eval tier relies on):
+    everything *upstream* of execution is seeded — model parameters from
+    ``seed`` (:attr:`seed` records it), request generation from the
+    ``seed`` passed to :meth:`make_requests`, zero-padding in the batcher —
+    so two engines built with the same config and seed serve byte-identical
+    batches.  The measured durations themselves are real wall-clock and
+    therefore machine- and run-dependent; that is the point of the engine
+    substrate, and downstream consumers must not treat them as stable."""
 
     def __init__(self, model_cfg: ModelConfig, cfg: EngineConfig | None = None, seed: int = 0):
         self.cfg = cfg or EngineConfig()
+        self.seed = seed
         self.model = Model(model_cfg)
         self.params = self.model.init(jax.random.PRNGKey(seed))
         self.executor = JaxExecutor(self.model, self.params, self.cfg)
+
+    def executor_for(self, scale: float = 1.0) -> JaxExecutor | _ScaledExecutor:
+        """Executor factory for pool construction: ``scale == 1`` returns
+        the shared measured executor; ``scale > 1`` wraps it so the replica
+        appears ``scale``× slower (heterogeneous pools, one real backend)."""
+        if scale == 1.0:
+            return self.executor
+        if scale <= 0.0:
+            raise ValueError(f"executor scale must be positive, got {scale}")
+        return _ScaledExecutor(self.executor, scale)
 
     # -------------------------------------------------------- profiling
     def profile_latency_model(self) -> BatchLatencyModel:
@@ -149,12 +207,9 @@ class ServingEngine:
         p99 = float(np.quantile(alone, 0.99))
         slo = slo_scale * p99
 
-        ref_b = self.cfg.batch_sizes[-1]
-        est_max = float(
-            np.mean(np.max(rng.choice(sizes, size=(128, ref_b)), axis=1))
+        rate = offered_rate(
+            sizes, lm, utilization, self.cfg.batch_sizes[-1], rng
         )
-        capacity = ref_b / (lm.c0 + lm.c1 * ref_b * est_max)
-        rate = utilization * capacity
         gaps = rng.exponential(1.0 / rate, size=n)
         arrivals = np.cumsum(gaps)
 
@@ -188,15 +243,24 @@ class ServingEngine:
         seed: int = 0,
         horizon: float | None = None,
         charge_scheduler_overhead: bool = False,
+        executors: Sequence | None = None,
     ) -> SimResult:
         """Serve one arrival stream across N replica schedulers (§3.1).
 
-        All replicas share this engine's measured JAX executor (one
-        physical backend timed once per batch); the front-end ``policy``
-        assigns arrivals to replicas."""
+        By default all replicas share this engine's measured JAX executor
+        (one physical backend timed once per batch); pass ``executors``
+        (one per scheduler, e.g. from :meth:`executor_for`) to build a
+        heterogeneous pool of fast and scaled-slow replicas.  The front-end
+        ``policy`` assigns arrivals to replicas."""
+        if executors is None:
+            executors = [self.executor] * len(schedulers)
+        if len(executors) != len(schedulers):
+            raise ValueError(
+                f"got {len(schedulers)} schedulers but {len(executors)} executors"
+            )
         return run_event_loop(
             list(requests),
-            [Worker(s, self.executor) for s in schedulers],
+            [Worker(s, e) for s, e in zip(schedulers, executors)],
             policy=policy,
             seed=seed,
             horizon=horizon,

@@ -19,7 +19,14 @@ from ..core.distributions import BatchLatencyModel, EmpiricalDistribution
 from ..core.request import Request
 from .workload import AppWorkload
 
-__all__ = ["TraceConfig", "azure_like_arrivals", "generate_requests", "RequestSet"]
+__all__ = [
+    "TraceConfig",
+    "azure_like_arrivals",
+    "generate_requests",
+    "offered_rate",
+    "sample_alone_times",
+    "RequestSet",
+]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -53,6 +60,47 @@ def azure_like_arrivals(
             arrivals.extend(ts.tolist())
         t += cfg.bucket_ms
     return np.asarray(arrivals[:n])
+
+
+def sample_alone_times(
+    apps: Sequence[AppWorkload], rng: np.random.Generator, n: int
+) -> tuple[np.ndarray, np.ndarray]:
+    """Draw ``(app index, alone time)`` for ``n`` requests — the §5.2
+    weight-proportional per-app sampling, shared by the sim and engine
+    request generators so both substrates draw from identical mixtures."""
+    weights = np.array([a.weight for a in apps], dtype=np.float64)
+    weights = weights / weights.sum()
+    which = rng.choice(len(apps), size=n, p=weights)
+    alone = np.empty(n)
+    for i, app in enumerate(apps):
+        mask = which == i
+        if mask.any():
+            alone[mask] = app.sample(rng, int(mask.sum()))
+    return which, alone
+
+
+def offered_rate(
+    sizes: np.ndarray,
+    latency_model: BatchLatencyModel,
+    utilization: float,
+    reference_batch: int,
+    rng: np.random.Generator,
+) -> float:
+    """Arrival rate (requests/ms) that offers ``utilization`` of one
+    worker batching at ``reference_batch``, with the straggler inflation
+    of Eq. 4 (E[max] over the joint size mixture).  ``utilization`` is
+    load a *well-batched* worker can sustain — which mis-estimating
+    schedulers squander (§2.3).  Shared by the sim and engine request
+    generators so "utilization 0.85" means the same thing relative to
+    either substrate's latency curve."""
+    ref_b = reference_batch
+    est_max = float(
+        np.mean(
+            np.max(rng.choice(sizes, size=(256, ref_b), replace=True), axis=1)
+        )
+    )
+    batch_ms = latency_model.c0 + latency_model.c1 * ref_b * est_max
+    return utilization * (ref_b / batch_ms)
 
 
 @dataclasses.dataclass
@@ -128,15 +176,7 @@ def generate_requests(
     """
     cfg = cfg or TraceConfig()
     rng = np.random.default_rng(cfg.seed)
-    weights = np.array([a.weight for a in apps], dtype=np.float64)
-    weights = weights / weights.sum()
-
-    which = rng.choice(len(apps), size=cfg.n_requests, p=weights)
-    alone = np.empty(cfg.n_requests)
-    for i, app in enumerate(apps):
-        mask = which == i
-        if mask.any():
-            alone[mask] = app.sample(rng, int(mask.sum()))
+    which, alone = sample_alone_times(apps, rng, cfg.n_requests)
 
     # Invert Eq. 3 at k = 1: s = (alone − c0) / c1.
     sizes = np.maximum(alone - latency_model.c0, 0.1) / latency_model.c1
@@ -144,21 +184,9 @@ def generate_requests(
     p99 = float(np.quantile(alone, 0.99))
     slo = slo_scale * p99
 
-    # Capacity reference: a worker running mixed batches of
-    # ``reference_batch`` requests, with the straggler inflation of Eq. 4
-    # (E[max] over the joint mixture).  ``utilization`` is offered load
-    # relative to this — i.e. a load a well-batched worker can sustain,
-    # which mis-estimating schedulers squander (§2.3).
-    ref_b = cfg.reference_batch
-    est_max = float(
-        np.mean(
-            np.max(rng.choice(sizes, size=(256, ref_b), replace=True), axis=1)
-        )
+    rate = offered_rate(
+        sizes, latency_model, cfg.utilization, cfg.reference_batch, rng
     )
-    batch_ms = latency_model.c0 + latency_model.c1 * ref_b * est_max
-    capacity_per_ms = ref_b / batch_ms  # requests per ms at full tilt
-    rate = cfg.utilization * capacity_per_ms
-
     arrivals = azure_like_arrivals(rate, cfg.n_requests, cfg, rng)
 
     reqs = [

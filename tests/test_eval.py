@@ -1,5 +1,7 @@
 """The ``repro.eval`` subsystem: spec JSON round-trips, runner determinism
-(serial == parallel, run-to-run), the claims layer, and the CLI artifact."""
+(serial == parallel, run-to-run), the substrate field (sim-only here —
+real-engine cells are exercised in ``test_eval_engine.py``), the claims
+layer, the sched-throughput CI gate, and the CLI artifact."""
 
 from __future__ import annotations
 
@@ -18,11 +20,12 @@ from repro.eval import (
     write_artifact,
 )
 from repro.eval.claims import (
+    claim_scaleout_dispatch,
     claim_slo_monotonicity,
     claim_static_parity,
     claim_tight_slo_dominance,
 )
-from repro.eval.grid import GRIDS, SYSTEMS, small, tiny
+from repro.eval.grid import GRIDS, SYSTEMS, _scaleout_cells, engine_smoke, small, tiny
 
 
 # -- specs -------------------------------------------------------------------
@@ -71,7 +74,75 @@ def test_grids_are_well_formed():
         specs = build()
         assert specs, name
         assert len({s.tag for s in specs}) == len(specs)  # tags are unique
-    assert len(small()) == 3 * 3 * 5 * len(SYSTEMS)
+    assert len(small()) == 3 * 3 * 5 * len(SYSTEMS) + len(_scaleout_cells())
+
+
+def test_spec_substrate_round_trip_and_default():
+    spec = ExperimentSpec(
+        workload="bimodal", slo_scale=1.5, substrate="engine", tag="e"
+    )
+    blob = json.dumps(spec.to_dict())
+    assert ExperimentSpec.from_dict(json.loads(blob)) == spec
+    # Pre-substrate JSON (PR 3 artifacts) loads with the sim default.
+    legacy = spec.to_dict()
+    del legacy["substrate"]
+    assert ExperimentSpec.from_dict(legacy).substrate == "sim"
+
+
+def test_parse_substrate():
+    from repro.eval import parse_substrate
+
+    assert parse_substrate("sim") == ("sim", "")
+    assert parse_substrate("engine") == ("engine", "orloj_gpt")
+    assert parse_substrate("engine:orloj_gpt_paper") == (
+        "engine",
+        "orloj_gpt_paper",
+    )
+    with pytest.raises(ValueError, match="unknown substrate"):
+        parse_substrate("gpu")
+    with pytest.raises(ValueError, match="unknown engine model"):
+        parse_substrate("engine:nope")
+
+
+def test_engine_substrate_unavailable_raises(monkeypatch):
+    """A bare environment (no JAX model stack) must fail an engine cell
+    with an actionable error — and must fail *only* engine cells: sim
+    cells never touch the model stack."""
+    import repro.eval.substrate as substrate
+
+    monkeypatch.setattr(
+        substrate, "_engine_import_error", lambda: "ImportError: no jax"
+    )
+    monkeypatch.setattr(substrate, "_ENGINE_CACHE", {})
+    with pytest.raises(RuntimeError, match="substrate 'engine' needs the JAX"):
+        run_spec(
+            ExperimentSpec(workload="bimodal", slo_scale=3.0, substrate="engine")
+        )
+    # sim cells are untouched by the patched availability
+    r = run_spec(ExperimentSpec(workload="static", slo_scale=3.0, n_requests=40))
+    assert r.n_total == 40
+
+
+def test_engine_substrate_rejects_time_scale():
+    """The Fig.-14 shrink knob is sim-only: on the engine substrate the
+    calibration rescale would cancel it bit-for-bit, so it must error
+    rather than silently no-op."""
+    with pytest.raises(ValueError, match="time_scale"):
+        run_spec(
+            ExperimentSpec(
+                workload="bimodal",
+                slo_scale=3.0,
+                substrate="engine",
+                time_scale=0.5,
+            )
+        )
+
+
+def test_engine_smoke_grid_shape():
+    specs = engine_smoke()
+    assert 2 <= len(specs) <= 4
+    assert all(s.substrate == "engine" for s in specs)
+    assert len({s.tag for s in specs}) == len(specs)
 
 
 # -- runner determinism ------------------------------------------------------
@@ -208,6 +279,63 @@ def test_monotonicity_slack():
     assert not c.passed and c.margin == pytest.approx(-0.05)
 
 
+def _fake_pool(
+    policy: str, finish_rate: float, seed: int = 0, hetero: bool = True
+) -> ExperimentResult:
+    r = _fake("orloj", finish_rate, slo=3.0, seed=seed)
+    spec = ExperimentSpec(
+        **{
+            **r.spec.to_dict(),
+            "n_workers": 4,
+            "policy": policy,
+            "hetero": hetero,
+        }
+    )
+    return ExperimentResult(**{**r.to_dict(), "spec": spec})
+
+
+def test_scaleout_claim_passes_and_fails_on_seed_means():
+    ok = [
+        _fake_pool("jsq_work", 0.90, seed=0),
+        _fake_pool("jsq_work", 0.94, seed=1),
+        _fake_pool("round_robin", 0.88, seed=0),
+        _fake_pool("round_robin", 0.90, seed=1),
+    ]
+    c = claim_scaleout_dispatch(ok, slack=0.02)
+    assert c.passed and c.margin == pytest.approx(0.05)
+
+    bad = [_fake_pool("jsq_work", 0.80), _fake_pool("round_robin", 0.90)]
+    c2 = claim_scaleout_dispatch(bad, slack=0.02)
+    assert not c2.passed and c2.margin == pytest.approx(-0.08)
+
+
+def test_scaleout_claim_separates_pool_shapes_and_needs_both_policies():
+    # hetero and homogeneous pools are distinct cells, not averaged
+    mixed = [
+        _fake_pool("jsq_work", 0.90, hetero=True),
+        _fake_pool("round_robin", 0.95, hetero=False),
+    ]
+    assert not claim_scaleout_dispatch(mixed).passed  # no cell has both
+
+    # single-worker cells never feed the claim
+    assert not claim_scaleout_dispatch([_fake("orloj", 0.9)]).passed
+
+
+def test_evaluate_claims_states_scaleout_only_with_pool_cells():
+    solo = [_fake("orloj", 0.9), _fake("nexus", 0.8)]
+    assert [c.name for c in evaluate_claims(solo)] == [
+        "tight-slo-dominance",
+        "static-parity",
+        "slo-monotonicity",
+    ]
+    pooled = solo + [
+        _fake_pool("jsq_work", 0.9),
+        _fake_pool("round_robin", 0.85),
+    ]
+    names = [c.name for c in evaluate_claims(pooled)]
+    assert names[-1] == "scale-out-dispatch"
+
+
 def test_claim_result_round_trips_via_artifact(tmp_path):
     results = [_fake("orloj", 0.9), _fake("nexus", 0.8)]
     claims = evaluate_claims(results)
@@ -219,6 +347,70 @@ def test_claim_result_round_trips_via_artifact(tmp_path):
     assert [ExperimentResult.from_dict(d) for d in loaded["results"]] == results2
     assert results2 == results
     assert [ClaimResult.from_dict(d) for d in loaded["claims"]] == claims
+
+
+def test_write_artifact_merges_extra_sections(tmp_path):
+    path = tmp_path / "BENCH_eval.json"
+    doc = write_artifact(
+        str(path),
+        [_fake("orloj", 0.9)],
+        grid="unit",
+        extra={"engine_drift": {"n_cells": 1}},
+    )
+    assert doc["engine_drift"] == {"n_cells": 1}
+    loaded, _ = read_artifact(str(path))
+    assert loaded["engine_drift"] == {"n_cells": 1}
+    with pytest.raises(ValueError, match="reserved artifact keys"):
+        write_artifact(
+            str(path), [_fake("orloj", 0.9)], extra={"results": "clobbered"}
+        )
+
+
+# -- sched-throughput CI gate ------------------------------------------------
+
+
+def _sched_doc(rate: float, nb_us: float) -> dict:
+    return {
+        "benchmark": "sched_throughput",
+        "sizes": {
+            "100": {
+                "baseline_arrivals_per_s": 1000.0,
+                "vectorized_arrivals_per_s": rate,
+                "speedup": 10.0,
+                "next_batch_us": nb_us,
+            }
+        },
+    }
+
+
+def test_sched_gate_ratio_band():
+    from repro.eval.sched_gate import check
+
+    base = _sched_doc(30_000.0, 300.0)
+    assert check(base, _sched_doc(29_000.0, 310.0)) == []
+    # runner noise within the 3x band passes
+    assert check(base, _sched_doc(11_000.0, 850.0)) == []
+    # >3x throughput regression fails
+    fails = check(base, _sched_doc(9_000.0, 300.0))
+    assert len(fails) == 1 and "throughput" in fails[0]
+    # >3x next_batch latency regression fails
+    fails = check(base, _sched_doc(30_000.0, 1_000.0))
+    assert len(fails) == 1 and "next_batch" in fails[0]
+    # a size missing from the fresh artifact fails loudly
+    assert check(base, {"sizes": {}}) == ["n=100: missing from the fresh artifact"]
+    assert check({"sizes": {}}, base) == ["baseline artifact has no 'sizes' section"]
+
+
+def test_sched_gate_cli_on_committed_artifact(capsys):
+    """The committed BENCH_sched.json must pass against itself."""
+    import pathlib
+
+    from repro.eval.sched_gate import main
+
+    artifact = str(pathlib.Path(__file__).resolve().parents[1] / "BENCH_sched.json")
+    rc = main(["--baseline", artifact, "--fresh", artifact])
+    assert rc == 0
+    assert "PASS" in capsys.readouterr().out
 
 
 # -- CLI ---------------------------------------------------------------------
