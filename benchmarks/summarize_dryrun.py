@@ -4,9 +4,8 @@ the dry-run artifacts."""
 from __future__ import annotations
 
 import json
-from pathlib import Path
 
-from .roofline import ART_DIR, load_rows, roofline_report
+from .roofline import ART_DIR, roofline_report
 
 OUT_DIR = ART_DIR.parent
 

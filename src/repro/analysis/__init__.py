@@ -1,0 +1,59 @@
+"""``repro.analysis`` — the repo's own static-analysis pass (DESIGN.md §9).
+
+The simulator/scheduler/eval stack only reproduces the paper because it
+obeys contracts that ordinary linters cannot express: seeded determinism
+(serial ≡ parallel replay), millisecond time-unit discipline feeding the
+Eq.-2/3 math, the allocation-free vectorized hot path from PR 2, and JAX
+PRNG/tracer hygiene in the kernel tier.  This package turns those prose
+contracts into AST-level CI gates:
+
+==  =====================  ==============================================
+ID  name                   contract
+==  =====================  ==============================================
+R1  determinism-wallclock  no wall-clock / global-RNG calls reachable
+                           from sim, scheduler or eval-replay modules
+R2  prng-key-reuse         a ``jax.random`` key that was split/folded or
+                           consumed by a sampler is never used again
+R3  units-suffix           time-valued names crossing module boundaries
+                           carry ``_ms``/``_s``; no mixed-unit arithmetic
+R4  replay-order           no iteration over unordered sets where order
+                           can leak into event ordering or aggregation
+R5  hotpath-alloc          no per-request dict/list/set churn inside the
+                           vectorized scheduler / event-loop hot path
+R6  tracer-hygiene         no Python control flow on traced values or
+                           host callbacks inside jit / Pallas bodies
+==  =====================  ==============================================
+
+Usage::
+
+    python -m repro.analysis --check src tests     # CI gate
+    python -m repro.analysis --list-rules          # rule catalogue
+    python -m repro.analysis --write-baseline src tests
+
+Findings are suppressed per line with ``# simlint: ignore[R1] -- reason``
+(the justification after ``--`` is required by ``--check``) and
+pre-existing accepted findings live in the committed
+``ANALYSIS_baseline.json``; only *new* findings fail the build.
+
+The pass is AST-only: it imports neither the analyzed modules nor jax, so
+it runs in milliseconds on a bare CI container.
+"""
+
+from __future__ import annotations
+
+from .core import FileContext, Finding, Rule, analyze_paths, analyze_source
+from .registry import ALL_RULES, get_rules
+from .baseline import Baseline, diff_against_baseline, fingerprint
+
+__all__ = [
+    "ALL_RULES",
+    "Baseline",
+    "FileContext",
+    "Finding",
+    "Rule",
+    "analyze_paths",
+    "analyze_source",
+    "diff_against_baseline",
+    "fingerprint",
+    "get_rules",
+]

@@ -1,0 +1,111 @@
+"""Findings baseline: grandfathered findings that do not fail ``--check``.
+
+``ANALYSIS_baseline.json`` (committed at the repo root) records accepted
+pre-existing findings so the CI gate is *ratcheting*: anything already in
+the baseline passes, any **new** finding fails the build, and fixing an
+old finding makes its baseline entry stale (reported, and pruned by the
+next ``--write-baseline``).
+
+Fingerprints deliberately exclude line/column so that unrelated edits
+shifting code around do not churn the baseline: a finding is identified
+by ``(rule, path, scope, message)`` plus a per-key occurrence count (two
+identical findings in one scope need two baseline slots).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+from collections import Counter
+from pathlib import Path
+from typing import Iterable, Mapping
+
+from .core import Finding
+
+__all__ = ["Baseline", "diff_against_baseline", "fingerprint"]
+
+_SCHEMA_VERSION = 1
+
+
+def fingerprint(f: Finding) -> str:
+    return f"{f.rule}|{f.path}|{f.scope}|{f.message}"
+
+
+@dataclasses.dataclass
+class Baseline:
+    """count per fingerprint, plus display metadata for the human report."""
+
+    counts: Counter
+    meta: dict[str, dict]
+
+    @classmethod
+    def empty(cls) -> "Baseline":
+        return cls(Counter(), {})
+
+    @classmethod
+    def from_findings(cls, findings: Iterable[Finding]) -> "Baseline":
+        counts: Counter = Counter()
+        meta: dict[str, dict] = {}
+        for f in findings:
+            fp = fingerprint(f)
+            counts[fp] += 1
+            meta.setdefault(
+                fp,
+                {
+                    "rule": f.rule,
+                    "name": f.name,
+                    "path": f.path,
+                    "scope": f.scope,
+                    "message": f.message,
+                },
+            )
+        return cls(counts, meta)
+
+    @classmethod
+    def load(cls, path: str | Path) -> "Baseline":
+        p = Path(path)
+        if not p.exists():
+            return cls.empty()
+        data = json.loads(p.read_text(encoding="utf-8"))
+        counts: Counter = Counter()
+        meta: dict[str, dict] = {}
+        for entry in data.get("findings", []):
+            fp = "{rule}|{path}|{scope}|{message}".format(**entry)
+            counts[fp] = int(entry.get("count", 1))
+            meta[fp] = {k: entry[k] for k in ("rule", "name", "path", "scope", "message")}
+        return cls(counts, meta)
+
+    def save(self, path: str | Path) -> None:
+        entries = []
+        for fp, count in sorted(self.counts.items()):
+            e = dict(self.meta[fp])
+            e["count"] = count
+            entries.append(e)
+        doc: Mapping = {
+            "schema_version": _SCHEMA_VERSION,
+            "tool": "repro.analysis",
+            "note": (
+                "Accepted pre-existing findings (DESIGN.md §9). New findings "
+                "fail --check; regenerate with --write-baseline after "
+                "deliberate triage only."
+            ),
+            "findings": entries,
+        }
+        Path(path).write_text(json.dumps(doc, indent=2) + "\n", encoding="utf-8")
+
+
+def diff_against_baseline(
+    findings: Iterable[Finding], baseline: Baseline
+) -> tuple[list[Finding], list[str]]:
+    """(new findings not covered by the baseline, stale baseline
+    fingerprints no longer observed)."""
+    budget = Counter(baseline.counts)
+    new: list[Finding] = []
+    for f in findings:
+        fp = fingerprint(f)
+        if budget.get(fp, 0) > 0:
+            budget[fp] -= 1
+        else:
+            new.append(f)
+    stale = sorted(fp for fp, n in budget.items() if n > 0)
+    return new, stale

@@ -1,0 +1,119 @@
+"""``python -m repro.analysis`` — the simlint CLI and CI gate.
+
+Exit status contract (what the ``static-analysis`` CI job keys off):
+
+- ``0`` — no findings beyond the committed baseline (and, under
+  ``--check``, every suppression carries a justification);
+- ``1`` — at least one *new* finding (or an unjustified suppression under
+  ``--check``);
+- ``2`` — usage/environment error (unparseable file, unknown rule).
+
+The pass never imports the analyzed code (AST-only), so it runs in
+milliseconds with no jax/numpy in the environment.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+from typing import Sequence
+
+from .baseline import Baseline, diff_against_baseline
+from .core import analyze_paths
+from .registry import ALL_RULES, get_rules
+from .report import render_human, render_json
+
+DEFAULT_BASELINE = "ANALYSIS_baseline.json"
+
+
+def build_parser() -> argparse.ArgumentParser:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="repo-specific static analysis (determinism / units / "
+        "JAX hygiene contracts — DESIGN.md §9)",
+    )
+    ap.add_argument("paths", nargs="*", default=["src", "tests"],
+                    help="files or directories to analyze (default: src tests)")
+    ap.add_argument("--check", action="store_true",
+                    help="gate mode: exit 1 on any new finding or "
+                    "unjustified suppression")
+    ap.add_argument("--json", action="store_true", dest="as_json",
+                    help="emit the JSON report instead of the human one")
+    ap.add_argument("--baseline", default=DEFAULT_BASELINE,
+                    help=f"baseline file (default: {DEFAULT_BASELINE})")
+    ap.add_argument("--no-baseline", action="store_true",
+                    help="ignore the baseline: every finding counts as new")
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="accept the current findings as the new baseline")
+    ap.add_argument("--rules", nargs="*", default=None, metavar="RULE",
+                    help="restrict to specific rule ids/names (default: all)")
+    ap.add_argument("--list-rules", action="store_true",
+                    help="print the rule catalogue and exit")
+    ap.add_argument("-v", "--verbose", action="store_true")
+    return ap
+
+
+def main(argv: Sequence[str] | None = None) -> int:
+    args = build_parser().parse_args(argv)
+
+    if args.list_rules:
+        for r in ALL_RULES:
+            zones = ", ".join(r.zones) if r.zones else "everywhere"
+            print(f"{r.rule_id}  {r.name:<22} {r.description}")
+            print(f"    zones: {zones}")
+        return 0
+
+    try:
+        rules = get_rules(args.rules)
+    except KeyError as exc:
+        print(f"error: {exc.args[0]}", file=sys.stderr)
+        return 2
+
+    errors: list[str] = []
+
+    def on_error(path: str, exc: Exception) -> None:
+        errors.append(f"{path}: {exc}")
+
+    findings, silenced = analyze_paths(args.paths, rules, on_error=on_error)
+    for msg in errors:
+        print(f"error: cannot analyze {msg}", file=sys.stderr)
+    if errors:
+        return 2
+
+    baseline = (
+        Baseline.empty()
+        if args.no_baseline
+        else Baseline.load(args.baseline)
+    )
+    new, stale = diff_against_baseline(findings, baseline)
+
+    if args.write_baseline:
+        Baseline.from_findings(findings).save(args.baseline)
+        print(
+            f"# wrote {args.baseline}: {len(findings)} accepted finding(s)",
+            file=sys.stderr,
+        )
+        return 0
+
+    if args.as_json:
+        render_json(sys.stdout, findings, new, stale, silenced, rules)
+    else:
+        render_human(
+            sys.stdout, findings, new, stale, silenced, verbose=args.verbose
+        )
+
+    if args.check:
+        unjustified = [(f, s) for f, s in silenced if not s.justified]
+        for f, _ in unjustified:
+            print(
+                f"error: {f.location()} [{f.rule}] suppression lacks a "
+                "`-- justification`",
+                file=sys.stderr,
+            )
+        if new or unjustified:
+            return 1
+    return 0
+
+
+if __name__ == "__main__":  # pragma: no cover
+    sys.exit(main())

@@ -1,0 +1,281 @@
+"""Visitor core of the ``repro.analysis`` pass.
+
+A :class:`Rule` sees one parsed module at a time through a
+:class:`FileContext` that pre-computes what every rule needs: the
+repo-relative posix path (zone matching), raw source lines (suppression
+comments), an import-alias map (so ``import time as _t; _t.perf_counter``
+still resolves to ``time.perf_counter``) and a qualified-scope index
+(``OrlojScheduler.on_arrivals``) for stable baseline fingerprints.
+
+Suppression contract (DESIGN.md §9): a finding on line ``L`` is silenced
+when line ``L`` — or a standalone comment line directly above it — carries
+``# simlint: ignore[<id>, ...]`` naming the rule id (or ``*``).  A ``--``
+justification is part of the convention; ``--check`` rejects bare
+suppressions.
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+import re
+from pathlib import Path
+from typing import Callable, Iterable, Iterator, Protocol, Sequence
+
+__all__ = [
+    "FileContext",
+    "Finding",
+    "Rule",
+    "Suppression",
+    "analyze_paths",
+    "analyze_source",
+    "dotted_name",
+    "iter_python_files",
+]
+
+_SUPPRESS_RE = re.compile(
+    r"#\s*simlint:\s*(?P<verb>ignore|skip-file)"
+    r"(?:\[(?P<ids>[^\]]*)\])?"
+    r"(?:\s*--\s*(?P<why>.*))?"
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One rule violation at a concrete source location."""
+
+    rule: str  # "R1" .. "R6"
+    name: str  # e.g. "determinism-wallclock"
+    path: str  # repo-relative posix path (or a virtual path in tests)
+    line: int  # 1-indexed
+    col: int
+    scope: str  # qualified enclosing scope, "<module>" at top level
+    message: str
+
+    def location(self) -> str:
+        return f"{self.path}:{self.line}:{self.col}"
+
+
+@dataclasses.dataclass(frozen=True)
+class Suppression:
+    """A parsed ``# simlint: ignore[...]`` comment."""
+
+    line: int  # line the suppression *applies to*
+    rule_ids: frozenset[str]  # {"*"} for a blanket ignore
+    justified: bool
+
+    def covers(self, finding: Finding) -> bool:
+        return finding.line == self.line and (
+            "*" in self.rule_ids or finding.rule in self.rule_ids
+        )
+
+
+def dotted_name(node: ast.AST) -> str | None:
+    """``a.b.c`` for a Name/Attribute chain, else None."""
+    parts: list[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+class FileContext:
+    """Everything rules need about one module, computed once."""
+
+    def __init__(self, path: str, source: str, tree: ast.Module | None = None):
+        self.path = Path(path).as_posix()
+        self.source = source
+        self.lines = source.splitlines()
+        self.tree = tree if tree is not None else ast.parse(source, filename=path)
+        self.aliases = _import_aliases(self.tree)
+        self._scopes = _scope_index(self.tree)
+        self.suppressions = _parse_suppressions(self.lines)
+        self.skip_file = any(
+            m and m.group("verb") == "skip-file"
+            for m in (_SUPPRESS_RE.search(ln) for ln in self.lines[:5])
+        )
+
+    # -- zone matching -------------------------------------------------
+    def in_zone(self, prefixes: Sequence[str]) -> bool:
+        return any(
+            self.path.startswith(p.rstrip("/") + "/") or self.path == p
+            for p in prefixes
+        )
+
+    # -- name resolution -----------------------------------------------
+    def resolve_call(self, node: ast.Call) -> str | None:
+        """Fully-qualified dotted name of a call target, alias-expanded."""
+        return self.resolve(node.func)
+
+    def resolve(self, node: ast.AST) -> str | None:
+        dn = dotted_name(node)
+        if dn is None:
+            return None
+        head, _, rest = dn.partition(".")
+        real = self.aliases.get(head, head)
+        return real + ("." + rest if rest else "")
+
+    # -- scopes ---------------------------------------------------------
+    def scope_of(self, node: ast.AST) -> str:
+        line = getattr(node, "lineno", 0)
+        best = "<module>"
+        best_span = None
+        for qual, (lo, hi) in self._scopes.items():
+            if lo <= line <= hi and (best_span is None or lo >= best_span):
+                best, best_span = qual, lo
+        return best
+
+    # -- findings -------------------------------------------------------
+    def finding(self, rule: "Rule", node: ast.AST, message: str) -> Finding:
+        return Finding(
+            rule=rule.rule_id,
+            name=rule.name,
+            path=self.path,
+            line=getattr(node, "lineno", 0),
+            col=getattr(node, "col_offset", 0),
+            scope=self.scope_of(node),
+            message=message,
+        )
+
+    def is_suppressed(self, finding: Finding) -> bool:
+        return any(s.covers(finding) for s in self.suppressions)
+
+    def suppression_for(self, finding: Finding) -> Suppression | None:
+        for s in self.suppressions:
+            if s.covers(finding):
+                return s
+        return None
+
+
+class Rule(Protocol):
+    """One machine-checked contract.  Implementations are stateless."""
+
+    rule_id: str  # "R1"
+    name: str  # "determinism-wallclock"
+    zones: tuple[str, ...]  # path prefixes the rule applies to
+    description: str
+
+    def check(self, ctx: FileContext) -> Iterator[Finding]: ...
+
+
+def _import_aliases(tree: ast.Module) -> dict[str, str]:
+    out: dict[str, str] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for a in node.names:
+                out[a.asname or a.name.split(".")[0]] = (
+                    a.name if a.asname else a.name.split(".")[0]
+                )
+        elif isinstance(node, ast.ImportFrom) and node.module and node.level == 0:
+            for a in node.names:
+                if a.name != "*":
+                    out[a.asname or a.name] = f"{node.module}.{a.name}"
+    return out
+
+
+def _scope_index(tree: ast.Module) -> dict[str, tuple[int, int]]:
+    """qualname -> (first line, last line) for every def/class."""
+    out: dict[str, tuple[int, int]] = {}
+
+    def visit(node: ast.AST, prefix: str) -> None:
+        for child in ast.iter_child_nodes(node):
+            if isinstance(
+                child, (ast.FunctionDef, ast.AsyncFunctionDef, ast.ClassDef)
+            ):
+                qual = f"{prefix}.{child.name}" if prefix else child.name
+                end = getattr(child, "end_lineno", child.lineno)
+                out[qual] = (child.lineno, end or child.lineno)
+                visit(child, qual)
+            else:
+                visit(child, prefix)
+
+    visit(tree, "")
+    return out
+
+
+def _parse_suppressions(lines: Sequence[str]) -> list[Suppression]:
+    out: list[Suppression] = []
+    for i, raw in enumerate(lines, start=1):
+        m = _SUPPRESS_RE.search(raw)
+        if not m or m.group("verb") != "ignore":
+            continue
+        ids = frozenset(
+            s.strip() for s in (m.group("ids") or "*").split(",") if s.strip()
+        ) or frozenset({"*"})
+        justified = bool((m.group("why") or "").strip())
+        # A standalone comment line suppresses the next line instead.
+        target = i + 1 if raw.lstrip().startswith("#") else i
+        out.append(Suppression(line=target, rule_ids=ids, justified=justified))
+    return out
+
+
+def iter_python_files(paths: Sequence[str]) -> Iterator[Path]:
+    seen: set[Path] = set()
+    for p in paths:
+        root = Path(p)
+        if root.is_file() and root.suffix == ".py":
+            candidates: Iterable[Path] = [root]
+        elif root.is_dir():
+            candidates = sorted(root.rglob("*.py"))
+        else:
+            candidates = []
+        for f in candidates:
+            if any(part.startswith(".") or part == "__pycache__" for part in f.parts):
+                continue
+            if f not in seen:
+                seen.add(f)
+                yield f
+
+
+def analyze_source(
+    source: str,
+    path: str,
+    rules: Sequence[Rule],
+    *,
+    keep_suppressed: bool = False,
+) -> tuple[list[Finding], list[tuple[Finding, Suppression]]]:
+    """Run ``rules`` over one source blob.  Returns (active findings,
+    suppressed findings with the suppression that silenced each)."""
+    ctx = FileContext(path, source)
+    if ctx.skip_file:
+        return [], []
+    active: list[Finding] = []
+    silenced: list[tuple[Finding, Suppression]] = []
+    for rule in rules:
+        if rule.zones and not ctx.in_zone(rule.zones):
+            continue
+        for f in rule.check(ctx):
+            sup = ctx.suppression_for(f)
+            if sup is not None:
+                silenced.append((f, sup))
+                if keep_suppressed:
+                    active.append(f)
+            else:
+                active.append(f)
+    active.sort(key=lambda f: (f.path, f.line, f.col, f.rule))
+    return active, silenced
+
+
+def analyze_paths(
+    paths: Sequence[str],
+    rules: Sequence[Rule],
+    *,
+    on_error: Callable[[str, Exception], None] | None = None,
+) -> tuple[list[Finding], list[tuple[Finding, Suppression]]]:
+    findings: list[Finding] = []
+    silenced: list[tuple[Finding, Suppression]] = []
+    for f in iter_python_files(paths):
+        try:
+            source = f.read_text(encoding="utf-8")
+            got, sil = analyze_source(source, str(f), rules)
+        except (SyntaxError, UnicodeDecodeError) as exc:
+            if on_error is not None:
+                on_error(str(f), exc)
+            continue
+        findings.extend(got)
+        silenced.extend(sil)
+    findings.sort(key=lambda x: (x.path, x.line, x.col, x.rule))
+    return findings, silenced

@@ -1,0 +1,48 @@
+"""Rule registry: the canonical, ordered catalogue of simlint rules.
+
+Rules register here (not in the CLI) so library users, the test fixtures
+and the CLI all agree on what "all rules" means.  Adding a rule is: write
+the class, append it to :data:`ALL_RULES`, add its fixtures, document the
+contract in DESIGN.md §9.
+"""
+
+from __future__ import annotations
+
+from typing import Sequence
+
+from .core import Rule
+from .rules import (
+    DeterminismRule,
+    HotPathAllocRule,
+    PrngKeyReuseRule,
+    ReplayOrderRule,
+    TracerHygieneRule,
+    UnitsRule,
+)
+
+ALL_RULES: tuple[Rule, ...] = (
+    DeterminismRule(),
+    PrngKeyReuseRule(),
+    UnitsRule(),
+    ReplayOrderRule(),
+    HotPathAllocRule(),
+    TracerHygieneRule(),
+)
+
+_BY_ID = {r.rule_id: r for r in ALL_RULES}
+_BY_NAME = {r.name: r for r in ALL_RULES}
+
+
+def get_rules(selectors: Sequence[str] | None = None) -> tuple[Rule, ...]:
+    """Rules by id ("R2") or name ("prng-key-reuse"); all when None."""
+    if not selectors:
+        return ALL_RULES
+    out: list[Rule] = []
+    for sel in selectors:
+        rule = _BY_ID.get(sel) or _BY_NAME.get(sel)
+        if rule is None:
+            known = ", ".join(sorted(_BY_ID))
+            raise KeyError(f"unknown rule {sel!r}; known ids: {known}")
+        if rule not in out:
+            out.append(rule)
+    return tuple(out)

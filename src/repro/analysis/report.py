@@ -1,0 +1,111 @@
+"""Reporters: human-readable text and machine-readable JSON.
+
+The human reporter prints ``path:line:col [Rx/name] message`` grouped by
+file (the format editors and CI logs both parse); the JSON reporter emits
+the full finding list plus the baseline diff so downstream tooling (or
+the next PR's dashboards) can consume the gate's verdict directly.
+"""
+
+from __future__ import annotations
+
+import json
+from collections import Counter
+from typing import IO, Sequence
+
+from .baseline import fingerprint
+from .core import Finding, Rule, Suppression
+
+__all__ = ["render_human", "render_json"]
+
+
+def render_human(
+    out: IO[str],
+    findings: Sequence[Finding],
+    new: Sequence[Finding],
+    stale: Sequence[str],
+    silenced: Sequence[tuple[Finding, Suppression]],
+    *,
+    verbose: bool = False,
+) -> None:
+    new_fps = Counter(fingerprint(f) for f in new)
+    budget = Counter(new_fps)
+    by_file: dict[str, list[Finding]] = {}
+    for f in findings:
+        by_file.setdefault(f.path, []).append(f)
+    for path in sorted(by_file):
+        out.write(f"{path}\n")
+        for f in by_file[path]:
+            fp = fingerprint(f)
+            if budget.get(fp, 0) > 0:
+                budget[fp] -= 1
+                tag = "NEW "
+            else:
+                tag = "base" if not verbose else "baseline"
+            out.write(
+                f"  {f.line}:{f.col}  [{f.rule}/{f.name}] ({tag}) {f.message}\n"
+            )
+    if verbose and silenced:
+        out.write(f"# {len(silenced)} suppressed finding(s):\n")
+        for f, sup in silenced:
+            why = "justified" if sup.justified else "NO JUSTIFICATION"
+            out.write(f"#   {f.location()} [{f.rule}] {why}\n")
+    if stale:
+        out.write(
+            f"# {len(stale)} stale baseline entr{'y' if len(stale) == 1 else 'ies'} "
+            "(fixed findings — prune with --write-baseline):\n"
+        )
+        for fp in stale:
+            out.write(f"#   {fp}\n")
+    out.write(
+        f"# {len(findings)} finding(s): {len(new)} new, "
+        f"{len(findings) - len(new)} baselined, {len(silenced)} suppressed\n"
+    )
+
+
+def render_json(
+    out: IO[str],
+    findings: Sequence[Finding],
+    new: Sequence[Finding],
+    stale: Sequence[str],
+    silenced: Sequence[tuple[Finding, Suppression]],
+    rules: Sequence[Rule],
+) -> None:
+    new_set = {id(f) for f in new}
+    doc = {
+        "tool": "repro.analysis",
+        "rules": [
+            {"id": r.rule_id, "name": r.name, "description": r.description}
+            for r in rules
+        ],
+        "findings": [
+            {
+                "rule": f.rule,
+                "name": f.name,
+                "path": f.path,
+                "line": f.line,
+                "col": f.col,
+                "scope": f.scope,
+                "message": f.message,
+                "new": id(f) in new_set,
+            }
+            for f in findings
+        ],
+        "suppressed": [
+            {
+                "rule": f.rule,
+                "path": f.path,
+                "line": f.line,
+                "justified": sup.justified,
+            }
+            for f, sup in silenced
+        ],
+        "stale_baseline": list(stale),
+        "summary": {
+            "total": len(findings),
+            "new": len(new),
+            "baselined": len(findings) - len(new),
+            "suppressed": len(silenced),
+        },
+    }
+    json.dump(doc, out, indent=2)
+    out.write("\n")

@@ -1,0 +1,23 @@
+"""Rule implementations for the ``repro.analysis`` pass (DESIGN.md §9).
+
+One module per contract family; :data:`repro.analysis.registry.ALL_RULES`
+assembles them in rule-id order.
+"""
+
+from __future__ import annotations
+
+from .determinism import DeterminismRule
+from .prng import PrngKeyReuseRule
+from .units import UnitsRule
+from .replay import ReplayOrderRule
+from .hotpath import HotPathAllocRule
+from .tracer import TracerHygieneRule
+
+__all__ = [
+    "DeterminismRule",
+    "PrngKeyReuseRule",
+    "UnitsRule",
+    "ReplayOrderRule",
+    "HotPathAllocRule",
+    "TracerHygieneRule",
+]

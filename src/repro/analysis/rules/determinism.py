@@ -1,0 +1,111 @@
+"""R1 ``determinism-wallclock`` — no wall-clock or global-RNG calls in
+replay-determinism zones.
+
+The eval pipeline's serial ≡ parallel replay guarantee (DESIGN.md §8) and
+the seeded trace regeneration contract both die silently the moment a
+sim/scheduler/eval module reads the wall clock or an unseeded RNG.  Flags:
+
+- ``time.time``/``time.monotonic``/``time.perf_counter`` (+ ``_ns``
+  variants) and ``datetime.now``/``utcnow``/``today`` — legitimate
+  wall-clock *measurement* sites (scheduler-overhead timing, CLI progress)
+  carry an explicit ``# simlint: ignore[R1] -- ...`` justification;
+- any call through the stdlib ``random`` module (process-global state);
+- legacy global ``numpy.random.*`` functions (``seed``/``shuffle``/...);
+- ``numpy.random.default_rng()`` with *no* seed argument.
+
+Seeded ``default_rng(seed)`` construction and passing
+``numpy.random.Generator`` objects around are the approved idiom and are
+not flagged.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Iterator
+
+from ..core import FileContext, Finding
+
+_WALLCLOCK = {
+    "time.time",
+    "time.time_ns",
+    "time.monotonic",
+    "time.monotonic_ns",
+    "time.perf_counter",
+    "time.perf_counter_ns",
+    "time.process_time",
+    "datetime.datetime.now",
+    "datetime.datetime.utcnow",
+    "datetime.date.today",
+}
+
+_NUMPY_GLOBAL = {
+    "seed",
+    "random",
+    "rand",
+    "randn",
+    "randint",
+    "random_sample",
+    "choice",
+    "shuffle",
+    "permutation",
+    "uniform",
+    "normal",
+    "exponential",
+    "poisson",
+}
+
+
+class DeterminismRule:
+    rule_id = "R1"
+    name = "determinism-wallclock"
+    zones = (
+        "src/repro/core",
+        "src/repro/eval",
+        "src/repro/serving",
+        "src/repro/launch",
+    )
+    description = (
+        "wall-clock, stdlib-random and unseeded numpy RNG calls are banned "
+        "in sim/scheduler/eval-replay modules"
+    )
+
+    def check(self, ctx: FileContext) -> Iterator[Finding]:
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            target = ctx.resolve_call(node)
+            if target is None:
+                continue
+            if target in _WALLCLOCK:
+                yield ctx.finding(
+                    self,
+                    node,
+                    f"wall-clock call `{target}()` in a determinism zone; "
+                    "sim/eval code must run on virtual time (suppress real "
+                    "measurement sites with a justification)",
+                )
+            elif target.startswith("random."):
+                yield ctx.finding(
+                    self,
+                    node,
+                    f"stdlib `{target}()` uses process-global RNG state; "
+                    "thread a seeded `numpy.random.Generator` instead",
+                )
+            elif target in ("numpy.random.default_rng", "np.random.default_rng"):
+                if not node.args and not node.keywords:
+                    yield ctx.finding(
+                        self,
+                        node,
+                        "`numpy.random.default_rng()` without a seed is "
+                        "entropy-seeded; pass the replayed seed explicitly",
+                    )
+            elif (
+                target.startswith("numpy.random.")
+                and target.rsplit(".", 1)[-1] in _NUMPY_GLOBAL
+            ):
+                yield ctx.finding(
+                    self,
+                    node,
+                    f"global `{target}()` mutates/reads shared numpy RNG "
+                    "state; use a seeded `numpy.random.Generator`",
+                )

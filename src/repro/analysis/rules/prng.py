@@ -1,0 +1,257 @@
+"""R2 ``prng-key-reuse`` — JAX PRNG key discipline.
+
+The functional-PRNG contract this repo's kernel/model tier relies on:
+
+- after ``split(key, ...)`` the *parent* binding is dead — using it again
+  (sampling, folding, re-splitting, or passing it onward) risks colliding
+  with the split's own children.  ``fold_in(key, 7)`` after
+  ``split(key, 8)`` is the canonical collision (the ``models/ssm.py``
+  probe this rule was built around: ``fold_in(k, i)`` and ``split(k, n)[i]``
+  are derived from the same hash family);
+- ``fold_in(key, data)`` with *distinct* data values is the approved way
+  to derive many children from one parent, so folding does not retire the
+  key — but a folded parent must not also be consumed by a sampler or
+  re-split;
+- a key consumed by a sampler (``normal``/``randint``/...) is spent: any
+  further ``split``/``fold_in``/sampler use of the same binding yields
+  correlated streams.
+
+Detection is a per-function linear scan.  Rebinding
+(``rng, sub = jax.random.split(rng)``) clears the name, so the canonical
+carry idiom stays silent; ``if``/``else`` branches are analyzed
+independently then merged (exclusive per-branch uses stay silent,
+use-after-branch is caught); loop bodies are scanned twice so loop-carried
+reuse (``for i in ...: x = normal(rng)``) is caught.
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+from typing import Iterator
+
+from ..core import FileContext, Finding
+
+_SAMPLERS = {
+    "ball",
+    "bernoulli",
+    "beta",
+    "bits",
+    "categorical",
+    "cauchy",
+    "chisquare",
+    "choice",
+    "dirichlet",
+    "exponential",
+    "gamma",
+    "gumbel",
+    "laplace",
+    "loggamma",
+    "logistic",
+    "maxwell",
+    "multivariate_normal",
+    "normal",
+    "orthogonal",
+    "pareto",
+    "permutation",
+    "poisson",
+    "randint",
+    "rayleigh",
+    "t",
+    "truncated_normal",
+    "uniform",
+    "weibull_min",
+}
+
+# mark of a key binding -> use kinds that violate the contract
+_VIOLATES = {
+    "split": {"split", "fold", "sampler", "other"},
+    "folded": {"split", "sampler"},
+    "consumed": {"split", "fold", "sampler"},
+}
+
+_VERB = {"split": "split", "folded": "folded (fold_in)", "consumed": "consumed by a sampler"}
+
+
+@dataclasses.dataclass
+class _State:
+    marks: dict[str, tuple[str, int]] = dataclasses.field(default_factory=dict)
+
+    def copy(self) -> "_State":
+        return _State(dict(self.marks))
+
+    def merge(self, other: "_State") -> None:
+        self.marks.update(other.marks)
+
+    def rebind(self, name: str) -> None:
+        self.marks.pop(name, None)
+
+
+def _use_kind(ctx: FileContext, call: ast.Call) -> str:
+    target = ctx.resolve_call(call)
+    if target == "jax.random.split":
+        return "split"
+    if target == "jax.random.fold_in":
+        return "fold"
+    if (
+        target is not None
+        and target.startswith("jax.random.")
+        and target.rsplit(".", 1)[-1] in _SAMPLERS
+    ):
+        return "sampler"
+    return "other"
+
+
+def _key_arg(call: ast.Call) -> str | None:
+    if call.args and isinstance(call.args[0], ast.Name):
+        return call.args[0].id
+    for kw in call.keywords:
+        if kw.arg == "key" and isinstance(kw.value, ast.Name):
+            return kw.value.id
+    return None
+
+
+def _assigned_names(node: ast.stmt) -> list[str]:
+    targets: list[ast.expr] = []
+    if isinstance(node, ast.Assign):
+        targets = list(node.targets)
+    elif isinstance(node, (ast.AnnAssign, ast.AugAssign)):
+        targets = [node.target]
+    out: list[str] = []
+    for t in targets:
+        for sub in ast.walk(t):
+            if isinstance(sub, ast.Name):
+                out.append(sub.id)
+    return out
+
+
+class PrngKeyReuseRule:
+    rule_id = "R2"
+    name = "prng-key-reuse"
+    zones = ("src", "tests", "examples", "benchmarks")
+    description = (
+        "a jax.random key that was split must not be reused; folded or "
+        "sampler-consumed keys must not also feed other derivations"
+    )
+
+    def check(self, ctx: FileContext) -> Iterator[Finding]:
+        if "jax" not in ctx.source:  # cheap pre-filter
+            return
+        seen: set[tuple[int, str]] = set()
+        out: list[Finding] = []
+        for node in ast.walk(ctx.tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                self._scan_block(ctx, node.body, _State(), seen, out)
+        out.sort(key=lambda f: (f.line, f.col))
+        yield from out
+
+    # -- linear scan ----------------------------------------------------
+    def _scan_block(
+        self,
+        ctx: FileContext,
+        stmts: list[ast.stmt],
+        state: _State,
+        seen: set[tuple[int, str]],
+        out: list[Finding],
+    ) -> None:
+        for stmt in stmts:
+            if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef, ast.ClassDef)):
+                continue  # nested defs get their own top-level scan
+            if isinstance(stmt, ast.If):
+                s1, s2 = state.copy(), state.copy()
+                self._scan_block(ctx, stmt.body, s1, seen, out)
+                self._scan_block(ctx, stmt.orelse, s2, seen, out)
+                state.merge(s1)
+                state.merge(s2)
+                continue
+            if isinstance(stmt, (ast.For, ast.AsyncFor, ast.While)):
+                self._scan_header(ctx, stmt, state, seen, out)
+                if isinstance(stmt, (ast.For, ast.AsyncFor)):
+                    for name in (
+                        n.id for n in ast.walk(stmt.target) if isinstance(n, ast.Name)
+                    ):
+                        state.rebind(name)
+                # two passes: the second sees the first's marks, i.e.
+                # loop-carried single-use violations
+                for _ in range(2):
+                    self._scan_block(ctx, stmt.body, state, seen, out)
+                self._scan_block(ctx, stmt.orelse, state, seen, out)
+                continue
+            if isinstance(stmt, (ast.With, ast.AsyncWith)):
+                self._scan_header(ctx, stmt, state, seen, out)
+                self._scan_block(ctx, stmt.body, state, seen, out)
+                continue
+            if isinstance(stmt, ast.Try):
+                for block in (stmt.body, stmt.orelse, stmt.finalbody):
+                    self._scan_block(ctx, block, state, seen, out)
+                for handler in stmt.handlers:
+                    self._scan_block(ctx, handler.body, state, seen, out)
+                continue
+            self._scan_exprs(ctx, [stmt], state, seen, out)
+            for name in _assigned_names(stmt):
+                state.rebind(name)
+
+    def _scan_header(self, ctx, stmt, state, seen, out) -> None:
+        if isinstance(stmt, (ast.For, ast.AsyncFor)):
+            roots: list[ast.AST] = [stmt.iter]
+        elif isinstance(stmt, ast.While):
+            roots = [stmt.test]
+        else:
+            roots = [item.context_expr for item in stmt.items]
+        self._scan_exprs(ctx, roots, state, seen, out)
+
+    def _scan_exprs(
+        self,
+        ctx: FileContext,
+        roots: list[ast.AST],
+        state: _State,
+        seen: set[tuple[int, str]],
+        out: list[Finding],
+    ) -> None:
+        calls = [
+            n for root in roots for n in ast.walk(root) if isinstance(n, ast.Call)
+        ]
+        # 1) uses of already-marked bindings
+        for call in calls:
+            kind = _use_kind(ctx, call)
+            for arg in list(call.args) + [kw.value for kw in call.keywords]:
+                if not isinstance(arg, ast.Name):
+                    continue
+                got = state.marks.get(arg.id)
+                if got is None:
+                    continue
+                mark, line = got
+                if kind in _VIOLATES[mark]:
+                    self._emit(
+                        ctx, seen, out, arg,
+                        f"PRNG key `{arg.id}` was {_VERB[mark]} on line {line} "
+                        f"and is used again here ({kind} use); derive a fresh "
+                        "child key instead of reusing the binding",
+                    )
+        # 2) new marks from this statement
+        for call in calls:
+            kind = _use_kind(ctx, call)
+            if kind == "other":
+                continue
+            nm = _key_arg(call)
+            if nm is None:
+                continue
+            mark = {"split": "split", "fold": "folded", "sampler": "consumed"}[kind]
+            prev = state.marks.get(nm)
+            # split dominates folded/consumed; never downgrade a mark
+            if prev is None or mark == "split":
+                state.marks[nm] = (mark, call.lineno)
+
+    def _emit(
+        self,
+        ctx: FileContext,
+        seen: set[tuple[int, str]],
+        out: list[Finding],
+        node: ast.AST,
+        message: str,
+    ) -> None:
+        key = (getattr(node, "lineno", 0), message)
+        if key in seen:
+            return
+        seen.add(key)
+        out.append(ctx.finding(self, node, message))

@@ -1,0 +1,146 @@
+"""R4 ``replay-order`` — no unordered-set iteration in replay-critical code.
+
+The serial ≡ parallel replay guarantee and bitwise trace regeneration
+(DESIGN.md §8) require every loop whose body touches event ordering or
+result aggregation to run in a deterministic order.  ``dict`` iteration is
+insertion-ordered in CPython and the codebase leans on that deliberately;
+``set``/``frozenset`` iteration however follows hash-table layout, which
+for str keys changes with ``PYTHONHASHSEED`` — the classic
+AccaSim-style nondeterministic-replay bug.
+
+The rule flags iteration (``for``/comprehension generators) and
+order-leaking conversions (``list()``/``tuple()``/``enumerate()``/
+``zip()``) over expressions it can prove set-typed:
+
+- ``{a, b}`` literals, set comprehensions, ``set(...)``/``frozenset(...)``;
+- set operators (``|``/``&``/``-``/``^``) and set methods
+  (``.union``/``.intersection``/``.difference``/``.symmetric_difference``);
+- ``d.pop(k, set())`` / ``d.get(k, set())`` / ``d.setdefault(k, set())`` —
+  the stored-or-default pattern the scheduler uses for feasibility sets;
+- local names last bound to any of the above, and parameters/locals
+  annotated as sets.
+
+``sorted(...)`` (and other order-insensitive reducers: ``min``/``max``/
+``sum``/``len``/``any``/``all``) are the approved remedies and stay
+silent.  The analysis is per-scope and flow-insensitive across branches;
+it intentionally misses sets that arrive through attributes or call
+boundaries — those are covered by the replay regression tests.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Iterator
+
+from ..core import FileContext, Finding
+
+_SET_METHODS = {"union", "intersection", "difference", "symmetric_difference"}
+_DEFAULTING_METHODS = {"pop", "get", "setdefault"}
+_ORDER_LEAK_CALLS = {"list", "tuple", "enumerate", "zip", "iter", "reversed"}
+_SCOPE_BARRIERS = (ast.FunctionDef, ast.AsyncFunctionDef, ast.ClassDef, ast.Lambda)
+
+
+class ReplayOrderRule:
+    rule_id = "R4"
+    name = "replay-order"
+    zones = ("src/repro/core", "src/repro/eval", "src/repro/serving")
+    description = (
+        "iterating an unordered set where order can leak into event "
+        "ordering or aggregation; wrap in sorted(...)"
+    )
+
+    def check(self, ctx: FileContext) -> Iterator[Finding]:
+        yield from self._check_scope(ctx, ctx.tree.body, set())
+        for node in ast.walk(ctx.tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                set_names = {
+                    a.arg
+                    for a in (
+                        node.args.posonlyargs + node.args.args + node.args.kwonlyargs
+                    )
+                    if a.annotation is not None and _is_set_annotation(a.annotation)
+                }
+                yield from self._check_scope(ctx, node.body, set_names)
+
+    def _check_scope(
+        self, ctx: FileContext, body: list[ast.stmt], set_names: set[str]
+    ) -> Iterator[Finding]:
+        for node in _walk_scope(body):
+            if isinstance(node, ast.Assign):
+                for tgt in node.targets:
+                    if isinstance(tgt, ast.Name):
+                        if _is_set_expr(node.value, set_names):
+                            set_names.add(tgt.id)
+                        else:
+                            set_names.discard(tgt.id)
+            elif isinstance(node, ast.AnnAssign) and isinstance(node.target, ast.Name):
+                if _is_set_annotation(node.annotation):
+                    set_names.add(node.target.id)
+            elif isinstance(node, (ast.For, ast.AsyncFor)):
+                if _is_set_expr(node.iter, set_names):
+                    yield self._flag(ctx, node.iter, "for-loop")
+            elif isinstance(
+                node, (ast.ListComp, ast.SetComp, ast.DictComp, ast.GeneratorExp)
+            ):
+                for gen in node.generators:
+                    if _is_set_expr(gen.iter, set_names):
+                        yield self._flag(ctx, gen.iter, "comprehension")
+            elif isinstance(node, ast.Call):
+                fn_name = node.func.id if isinstance(node.func, ast.Name) else None
+                if fn_name in _ORDER_LEAK_CALLS:
+                    for arg in node.args:
+                        if _is_set_expr(arg, set_names):
+                            yield self._flag(ctx, arg, f"{fn_name}() conversion")
+
+    def _flag(self, ctx: FileContext, node: ast.AST, where: str) -> Finding:
+        return ctx.finding(
+            self,
+            node,
+            f"unordered set iterated via {where}; order can differ between "
+            "runs (PYTHONHASHSEED) — wrap in sorted(...) or use an "
+            "insertion-ordered dict",
+        )
+
+
+def _walk_scope(body: list[ast.stmt]) -> Iterator[ast.AST]:
+    """Pre-order walk that does not descend into nested def/class/lambda
+    (each scope is analyzed separately with its own binding table)."""
+    stack: list[ast.AST] = list(reversed(body))
+    while stack:
+        node = stack.pop()
+        if isinstance(node, _SCOPE_BARRIERS):
+            continue
+        yield node
+        stack.extend(reversed(list(ast.iter_child_nodes(node))))
+
+
+def _is_set_annotation(node: ast.AST) -> bool:
+    base = node.value if isinstance(node, ast.Subscript) else node
+    name = base.id if isinstance(base, ast.Name) else getattr(base, "attr", None)
+    return name in ("set", "frozenset", "Set", "FrozenSet", "AbstractSet", "MutableSet")
+
+
+def _is_set_expr(node: ast.AST, set_names: set[str]) -> bool:
+    if isinstance(node, (ast.Set, ast.SetComp)):
+        return True
+    if isinstance(node, ast.Name):
+        return node.id in set_names
+    if isinstance(node, ast.BinOp) and isinstance(
+        node.op, (ast.BitOr, ast.BitAnd, ast.BitXor, ast.Sub)
+    ):
+        return _is_set_expr(node.left, set_names) or _is_set_expr(
+            node.right, set_names
+        )
+    if isinstance(node, ast.Call):
+        if isinstance(node.func, ast.Name) and node.func.id in ("set", "frozenset"):
+            return True
+        if isinstance(node.func, ast.Attribute):
+            if node.func.attr in _SET_METHODS:
+                return True
+            if (
+                node.func.attr in _DEFAULTING_METHODS
+                and len(node.args) >= 2
+                and _is_set_expr(node.args[1], set_names)
+            ):
+                return True
+    return False

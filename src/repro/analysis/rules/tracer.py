@@ -1,0 +1,219 @@
+"""R6 ``tracer-hygiene`` — no Python control flow on traced values and no
+host callbacks inside ``@jax.jit`` / Pallas-kernel bodies.
+
+A Python ``if``/``while`` on a traced array raises
+``TracerBoolConversionError`` at trace time — or worse, silently bakes one
+branch into the compiled program when the value happens to be concrete
+during tracing.  Host callbacks (``print``, ``.item()``, ``np.asarray``)
+force a device sync and break the "HLO is free of host round-trips"
+property the roofline/profiling tier relies on (see the kernels' module
+docstrings).
+
+What counts as a jit/kernel body (AST-only heuristics):
+
+- functions decorated with ``@jax.jit`` / ``@partial(jax.jit, ...)`` —
+  names listed in a literal ``static_argnames`` are treated as static;
+- functions whose name is passed (directly or through
+  ``functools.partial``) as the first argument to ``pl.pallas_call`` —
+  their *positional* parameters are refs/traced operands, while
+  keyword-only parameters are the compile-time config the
+  ``partial(...)`` binds (the repo-wide kernel idiom).
+
+Inside such a body the rule flags ``if``/``while`` whose test reads a
+traced parameter (``.shape``/``.ndim``/``.dtype``/``.size`` attribute
+chains are static and stay silent — shape-driven branching is fine),
+``print``/``float``/``int``/``bool`` applied to a traced parameter,
+``.item()`` calls, and anything from ``jax.experimental.host_callback``.
+Use ``jax.lax.cond``/``jnp.where``/``pl.when`` or hoist the branch to a
+static kwarg instead.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Iterator
+
+from ..core import FileContext, Finding
+
+_STATIC_ATTRS = {"shape", "ndim", "dtype", "size"}
+_JIT_NAMES = {"jax.jit", "jax.pmap", "pl.pallas_call"}
+_CAST_CALLS = {"print", "float", "int", "bool"}
+
+
+class TracerHygieneRule:
+    rule_id = "R6"
+    name = "tracer-hygiene"
+    zones = (
+        "src/repro/kernels",
+        "src/repro/models",
+        "src/repro/serving",
+        "src/repro/launch",
+    )
+    description = (
+        "Python if/while on traced values or host callbacks inside "
+        "jit/Pallas bodies; use lax.cond/jnp.where/pl.when"
+    )
+
+    def check(self, ctx: FileContext) -> Iterator[Finding]:
+        if "jax" not in ctx.source:
+            return
+        kernel_names = _pallas_kernel_names(ctx)
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue
+            traced = self._traced_params(ctx, node, kernel_names)
+            if traced is None:
+                continue
+            yield from self._check_body(ctx, node, traced)
+
+    # -- classification -------------------------------------------------
+    def _traced_params(
+        self,
+        ctx: FileContext,
+        fn: ast.FunctionDef | ast.AsyncFunctionDef,
+        kernel_names: set[str],
+    ) -> set[str] | None:
+        """Traced parameter names, or None when fn is not a jit/kernel body."""
+        static: set[str] = set()
+        is_traced_fn = False
+        for dec in fn.decorator_list:
+            target = ctx.resolve(dec)
+            if target in ("jax.jit", "jax.pmap"):
+                is_traced_fn = True
+            elif isinstance(dec, ast.Call):
+                call_target = ctx.resolve_call(dec)
+                inner = dec.args[0] if dec.args else None
+                if call_target in ("jax.jit", "jax.pmap") or (
+                    call_target in ("functools.partial", "partial")
+                    and inner is not None
+                    and ctx.resolve(inner) in ("jax.jit", "jax.pmap")
+                ):
+                    is_traced_fn = True
+                    static |= _literal_static_argnames(dec)
+        positional_only = False
+        if fn.name in kernel_names:
+            is_traced_fn = True
+            positional_only = True  # kw-only params are compile-time config
+        if not is_traced_fn:
+            return None
+        params = [a.arg for a in fn.args.posonlyargs + fn.args.args]
+        if not positional_only:
+            params += [a.arg for a in fn.args.kwonlyargs]
+        return {p for p in params if p not in static and p not in ("self", "cls")}
+
+    # -- body checks -----------------------------------------------------
+    def _check_body(
+        self,
+        ctx: FileContext,
+        fn: ast.FunctionDef | ast.AsyncFunctionDef,
+        traced: set[str],
+    ) -> Iterator[Finding]:
+        for node in ast.walk(fn):
+            if isinstance(node, (ast.If, ast.While)):
+                name = _traced_name_in(node.test, traced)
+                if name is not None:
+                    kw = "while" if isinstance(node, ast.While) else "if"
+                    yield ctx.finding(
+                        self,
+                        node,
+                        f"Python `{kw}` on traced value `{name}` inside "
+                        f"`{fn.name}`; use jax.lax.cond/jnp.where/pl.when "
+                        "or make it a static kwarg",
+                    )
+            elif isinstance(node, ast.Call):
+                target = ctx.resolve_call(node)
+                fname = node.func.id if isinstance(node.func, ast.Name) else None
+                if fname in _CAST_CALLS and any(
+                    isinstance(a, ast.Name) and a.id in traced for a in node.args
+                ):
+                    yield ctx.finding(
+                        self,
+                        node,
+                        f"host-side `{fname}()` of a traced value inside "
+                        f"`{fn.name}` forces a sync at trace time",
+                    )
+                elif isinstance(node.func, ast.Attribute) and node.func.attr == "item":
+                    yield ctx.finding(
+                        self,
+                        node,
+                        f"`.item()` inside `{fn.name}` is a host round-trip; "
+                        "keep the value on device",
+                    )
+                elif target is not None and "host_callback" in target:
+                    yield ctx.finding(
+                        self,
+                        node,
+                        f"host callback `{target}` inside `{fn.name}`; "
+                        "jit/kernel bodies must stay device-only",
+                    )
+
+
+def _traced_name_in(test: ast.AST, traced: set[str]) -> str | None:
+    """First traced param read by ``test``, ignoring static attribute
+    chains (``x.shape[0]`` etc.)."""
+    stack = [test]
+    while stack:
+        node = stack.pop()
+        if isinstance(node, ast.Attribute) and node.attr in _STATIC_ATTRS:
+            continue  # prune: static metadata access
+        if isinstance(node, ast.Compare) and _is_none_identity(node):
+            continue  # prune: `x is None` is decided before tracing
+        if isinstance(node, ast.Name) and node.id in traced:
+            return node.id
+        stack.extend(ast.iter_child_nodes(node))
+    return None
+
+
+def _is_none_identity(node: ast.Compare) -> bool:
+    """``x is None`` / ``x is not None`` — the optional-argument idiom;
+    identity against None is resolved on the Python side, never traced."""
+    return all(isinstance(op, (ast.Is, ast.IsNot)) for op in node.ops) and all(
+        isinstance(c, ast.Constant) and c.value is None for c in node.comparators
+    )
+
+
+def _literal_static_argnames(dec: ast.Call) -> set[str]:
+    out: set[str] = set()
+    for kw in dec.keywords:
+        if kw.arg != "static_argnames":
+            continue
+        v = kw.value
+        elts = v.elts if isinstance(v, (ast.Tuple, ast.List)) else [v]
+        for e in elts:
+            if isinstance(e, ast.Constant) and isinstance(e.value, str):
+                out.add(e.value)
+    return out
+
+
+def _pallas_kernel_names(ctx: FileContext) -> set[str]:
+    """Function names passed (directly or via functools.partial, possibly
+    through one local alias) as the first argument to ``pl.pallas_call``."""
+    partial_of: dict[str, str] = {}  # local name -> wrapped function name
+    for node in ast.walk(ctx.tree):
+        if isinstance(node, ast.Assign) and isinstance(node.value, ast.Call):
+            if ctx.resolve_call(node.value) in ("functools.partial", "partial"):
+                inner = node.value.args[0] if node.value.args else None
+                if isinstance(inner, ast.Name):
+                    for tgt in node.targets:
+                        if isinstance(tgt, ast.Name):
+                            partial_of[tgt.id] = inner.id
+    out: set[str] = set()
+    for node in ast.walk(ctx.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        target = ctx.resolve_call(node)
+        if target is None or not target.endswith("pallas_call"):
+            continue
+        if not node.args:
+            continue
+        first = node.args[0]
+        if isinstance(first, ast.Name):
+            out.add(partial_of.get(first.id, first.id))
+        elif isinstance(first, ast.Call) and ctx.resolve_call(first) in (
+            "functools.partial",
+            "partial",
+        ):
+            inner = first.args[0] if first.args else None
+            if isinstance(inner, ast.Name):
+                out.add(inner.id)
+    return out

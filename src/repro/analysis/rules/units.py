@@ -1,0 +1,153 @@
+"""R3 ``units-suffix`` / mixed-unit arithmetic — millisecond discipline.
+
+Every quantity feeding the Eq.-2/3 math is in milliseconds; wall-clock
+measurements surface as seconds.  Two checks keep the two families from
+silently mixing (the classic 1000x bug):
+
+1. **boundary naming** — time-valued names that cross module boundaries
+   (function/method parameters and dataclass fields in ``core``/``eval``/
+   ``serving``) must carry an explicit unit suffix (``_ms``, ``_s``,
+   ``_us``, ``_ns``).  "Time-valued" is judged by the name itself: exact
+   words like ``deadline``/``latency``/``makespan`` or suffixes like
+   ``_time``/``_latency``/``_deadline``.  Private helpers (leading
+   underscore scope) are exempt — the contract is about *boundaries*.
+2. **mixed arithmetic** — an ``_ms``-suffixed operand may not meet an
+   ``_s``-suffixed one in ``+``/``-``/comparison without an explicit
+   conversion (multiplication/division are how conversions are written,
+   so they are exempt).
+
+Pre-existing accepted names (e.g. ``Request.true_time``, grandfathered
+with its documented c1-unit semantics) ride the committed
+``ANALYSIS_baseline.json`` rather than inline suppressions.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Iterator
+
+from ..core import FileContext, Finding
+
+_UNIT_SUFFIXES = ("_ms", "_s", "_us", "_ns", "_sec", "_seconds", "_millis")
+
+_TIME_EXACT = {
+    "deadline",
+    "duration",
+    "elapsed",
+    "latency",
+    "makespan",
+    "timeout",
+}
+_TIME_SUFFIXES = (
+    "_time",
+    "_times",
+    "_latency",
+    "_latencies",
+    "_deadline",
+    "_duration",
+    "_timeout",
+    "_elapsed",
+)
+
+# unit classes for the mixed-arithmetic check
+_MS_SUFFIXES = ("_ms", "_millis")
+_S_SUFFIXES = ("_s", "_sec", "_seconds")
+
+
+def _has_unit_suffix(name: str) -> bool:
+    return name.endswith(_UNIT_SUFFIXES)
+
+
+def _is_time_name(name: str) -> bool:
+    return name in _TIME_EXACT or name.endswith(_TIME_SUFFIXES)
+
+
+def _unit_of(node: ast.AST) -> str | None:
+    """'ms' | 's' when the expression is a unit-suffixed name/attribute."""
+    if isinstance(node, ast.Name):
+        name = node.id
+    elif isinstance(node, ast.Attribute):
+        name = node.attr
+    else:
+        return None
+    if name.endswith(_MS_SUFFIXES):
+        return "ms"
+    if name.endswith(_S_SUFFIXES):
+        return "s"
+    return None
+
+
+class UnitsRule:
+    rule_id = "R3"
+    name = "units-suffix"
+    zones = ("src/repro/core", "src/repro/eval", "src/repro/serving")
+    description = (
+        "time-valued names crossing module boundaries carry _ms/_s "
+        "suffixes; _ms and _s operands never mix without conversion"
+    )
+
+    def check(self, ctx: FileContext) -> Iterator[Finding]:
+        yield from self._check_boundaries(ctx)
+        yield from self._check_mixing(ctx)
+
+    # -- 1. boundary naming ---------------------------------------------
+    def _check_boundaries(self, ctx: FileContext) -> Iterator[Finding]:
+        for node in ast.walk(ctx.tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                if node.name.startswith("_"):
+                    continue  # private helper — not a module boundary
+                args = (
+                    node.args.posonlyargs + node.args.args + node.args.kwonlyargs
+                )
+                for a in args:
+                    if a.arg in ("self", "cls"):
+                        continue
+                    if _is_time_name(a.arg) and not _has_unit_suffix(a.arg):
+                        yield ctx.finding(
+                            self,
+                            a,
+                            f"parameter `{a.arg}` of public `{node.name}()` "
+                            "is time-valued but carries no unit suffix; "
+                            f"name it `{a.arg}_ms` (or `_s`)",
+                        )
+            elif isinstance(node, ast.ClassDef):
+                for stmt in node.body:
+                    if not isinstance(stmt, ast.AnnAssign):
+                        continue
+                    tgt = stmt.target
+                    if not isinstance(tgt, ast.Name):
+                        continue
+                    if tgt.id.startswith("_"):
+                        continue
+                    if _is_time_name(tgt.id) and not _has_unit_suffix(tgt.id):
+                        yield ctx.finding(
+                            self,
+                            stmt,
+                            f"field `{node.name}.{tgt.id}` is time-valued "
+                            "but carries no unit suffix; name it "
+                            f"`{tgt.id}_ms` (or `_s`)",
+                        )
+
+    # -- 2. mixed-unit arithmetic ---------------------------------------
+    def _check_mixing(self, ctx: FileContext) -> Iterator[Finding]:
+        for node in ast.walk(ctx.tree):
+            if isinstance(node, ast.BinOp) and isinstance(
+                node.op, (ast.Add, ast.Sub)
+            ):
+                pairs = [(node.left, node.right)]
+            elif isinstance(node, ast.Compare):
+                operands = [node.left] + list(node.comparators)
+                pairs = list(zip(operands, operands[1:]))
+            else:
+                continue
+            for left, right in pairs:
+                ul, ur = _unit_of(left), _unit_of(right)
+                if ul is not None and ur is not None and ul != ur:
+                    yield ctx.finding(
+                        self,
+                        node,
+                        f"mixing `_{ul}` and `_{ur}` operands in "
+                        "+/-/comparison without an explicit conversion "
+                        "(multiply by the factor first)",
+                    )
+                    break

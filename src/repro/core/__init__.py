@@ -37,6 +37,7 @@ from .scheduler import Batch, OrlojScheduler, SchedulerConfig
 from .eventloop import (
     DISPATCH_POLICIES,
     ModelExecutor,
+    SchedulerLike,
     SimResult,
     Worker,
     run_event_loop,
@@ -69,6 +70,7 @@ __all__ = [
     "NexusScheduler",
     "DISPATCH_POLICIES",
     "ModelExecutor",
+    "SchedulerLike",
     "SimResult",
     "Worker",
     "run_event_loop",

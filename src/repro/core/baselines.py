@@ -20,7 +20,6 @@ All baselines share the simulator interface of :class:`OrlojScheduler`:
 
 from __future__ import annotations
 
-import dataclasses
 import heapq
 import math
 from collections import deque
@@ -28,7 +27,7 @@ from typing import Sequence
 
 import numpy as np
 
-from .distributions import BatchLatencyModel, EmpiricalDistribution
+from .distributions import BatchLatencyModel
 from .request import Request
 from .scheduler import Batch
 
@@ -89,9 +88,9 @@ class _BaselineBase:
         return self.latency_model.c0 + self.latency_model.c1 * bs * self.est.value()
 
     def on_batch_done(
-        self, batch: Batch, now: float, alone_times: Sequence[float]
+        self, batch: Batch, now: float, alone_times_ms: Sequence[float]
     ) -> None:
-        for x in alone_times:
+        for x in alone_times_ms:
             self.est.observe(x)
 
     def on_arrivals(self, reqs: Sequence[Request], now: float) -> None:
@@ -148,11 +147,13 @@ class ClockworkScheduler(_BaselineBase):
         # Offline profile: Eq. 3 with the point estimate of the alone time.
         return self.latency_model.c0 + self.latency_model.c1 * bs * self.est.value()
 
-    def on_batch_done(self, batch, now, alone_times) -> None:
+    def on_batch_done(
+        self, batch: Batch, now: float, alone_times_ms: Sequence[float]
+    ) -> None:
         if self.adaptive:
             # Online adaptation is the hardened variant only; stock
             # Clockwork keeps its offline profile fixed.
-            super().on_batch_done(batch, now, alone_times)
+            super().on_batch_done(batch, now, alone_times_ms)
             r0 = batch.requests[0]
             if r0.started is not None and r0.finished is not None:
                 self._bs_obs.setdefault(
@@ -310,9 +311,9 @@ class ClipperScheduler(_BaselineBase):
         return Batch(picked, len(picked)), None
 
     def on_batch_done(
-        self, batch: Batch, now: float, alone_times: Sequence[float]
+        self, batch: Batch, now: float, alone_times_ms: Sequence[float]
     ) -> None:
-        super().on_batch_done(batch, now, alone_times)
+        super().on_batch_done(batch, now, alone_times_ms)
         if self._slo_hint is None:
             return
         # AIMD on observed batch *execution latency* vs the SLO budget

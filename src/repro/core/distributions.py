@@ -23,7 +23,7 @@ from __future__ import annotations
 import dataclasses
 import itertools
 import math
-from typing import Iterable, Sequence
+from typing import Sequence
 
 import numpy as np
 
@@ -295,12 +295,12 @@ class BatchLatencyModel:
             return math.ceil(l / self.bucket) * self.bucket
         return l
 
-    def batch_time(self, alone_times: Sequence[float]) -> float:
+    def batch_time(self, alone_times_ms: Sequence[float]) -> float:
         """Ground-truth batch execution time given standalone times."""
-        k = len(alone_times)
+        k = len(alone_times_ms)
         if k == 0:
             return 0.0
-        return self.c0 + self.c1 * k * self._bucketed(max(alone_times))
+        return self.c0 + self.c1 * k * self._bucketed(max(alone_times_ms))
 
     def batch_dist(
         self, max_dist: EmpiricalDistribution, k: int

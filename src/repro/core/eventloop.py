@@ -65,6 +65,7 @@ __all__ = [
     "DISPATCH_POLICIES",
     "Executor",
     "ModelExecutor",
+    "SchedulerLike",
     "SimResult",
     "Worker",
     "run_event_loop",
@@ -75,6 +76,21 @@ __all__ = [
 class Executor(Protocol):
     def __call__(self, batch: Batch, now: float) -> float:
         """Return the batch execution time in ms."""
+
+
+class SchedulerLike(Protocol):
+    """The contract the event loop drives (Orloj and every baseline).
+
+    ``on_arrivals`` (bulk delivery) is optional — the loop probes for it
+    with ``getattr`` and falls back to per-request ``on_arrival``."""
+
+    def on_arrival(self, req: Request, now: float) -> None: ...
+
+    def next_batch(self, now: float) -> tuple[Batch | None, float | None]: ...
+
+    def on_batch_done(
+        self, batch: Batch, now: float, alone_times_ms: Sequence[float]
+    ) -> None: ...
 
 
 @dataclasses.dataclass
@@ -103,7 +119,7 @@ class SimResult:
     n_dropped: int
     n_unserved: int
     worker_busy: float  # summed busy time across the pool
-    makespan: float  # virtual time of the last processed event
+    makespan_ms: float  # virtual time (ms) of the last processed event
     latencies: np.ndarray
     n_workers: int = 1
     peak_heap_size: int = 0  # high-water mark of the event heap
@@ -130,7 +146,7 @@ class SimResult:
     @property
     def utilization(self) -> float:
         """Pool utilization: busy time over total worker-time available."""
-        return self.worker_busy / max(self.makespan * self.n_workers, 1e-9)
+        return self.worker_busy / max(self.makespan_ms * self.n_workers, 1e-9)
 
     def summary(self) -> str:
         return (
@@ -147,11 +163,11 @@ class Worker:
     Executors may be shared between workers (homogeneous pool, one measured
     backend) or distinct (heterogeneous pool of fast/slow replicas)."""
 
-    scheduler: object
+    scheduler: SchedulerLike
     executor: Executor
 
 
-def _expected_alone(scheduler, req: Request) -> float:
+def _expected_alone(scheduler: SchedulerLike, req: Request) -> float:
     """E[alone] of ``req`` under the scheduler's learned app distribution
     (falls back to its scalar estimator, then to a unit cost)."""
     dists = getattr(scheduler, "_app_dists", None)
@@ -249,12 +265,16 @@ class _Pool:
         )
 
 
-def _round_robin(workers: Sequence[Worker], rng: np.random.Generator):
+# A dispatch policy: (request, now, pool) -> worker index.
+_PickFn = Callable[[Request, float, _Pool], int]
+
+
+def _round_robin(workers: Sequence[Worker], rng: np.random.Generator) -> _PickFn:
     it = itertools.cycle(range(len(workers)))
     return lambda req, now, pool: next(it)
 
 
-def _least_loaded(workers: Sequence[Worker], rng: np.random.Generator):
+def _least_loaded(workers: Sequence[Worker], rng: np.random.Generator) -> _PickFn:
     def pick(req: Request, now: float, pool: _Pool) -> int:
         loads = np.array(
             [
@@ -269,11 +289,11 @@ def _least_loaded(workers: Sequence[Worker], rng: np.random.Generator):
     return pick
 
 
-def _jsq_work(workers: Sequence[Worker], rng: np.random.Generator):
+def _jsq_work(workers: Sequence[Worker], rng: np.random.Generator) -> _PickFn:
     return lambda req, now, pool: int(np.argmin(pool.queued_work))
 
 
-def _p2c(workers: Sequence[Worker], rng: np.random.Generator):
+def _p2c(workers: Sequence[Worker], rng: np.random.Generator) -> _PickFn:
     n = len(workers)
 
     def pick(req: Request, now: float, pool: _Pool) -> int:
@@ -365,8 +385,10 @@ def run_event_loop(
         if pool.busy[w]:
             return
         worker = workers[w]
+        # simlint: ignore[R1] -- meters real scheduler overhead (reported, optionally charged as latency); the sim clock itself stays virtual
         t0 = _time.perf_counter()
         batch, wake = worker.scheduler.next_batch(now)
+        # simlint: ignore[R1] -- closes the overhead meter opened above
         dt = _time.perf_counter() - t0
         sched_time += dt
         n_decisions += 1
@@ -414,6 +436,7 @@ def run_event_loop(
             # worker.  The moment the worker goes busy (the high-load hot
             # path) the rest of the burst is delivered as ONE bulk
             # ``on_arrivals`` call and scored in a single vectorized pass.
+            # simlint: ignore[R5] -- one burst buffer per ARRIVAL event; the coalescing is what enables the bulk on_arrivals path
             arrivals: list[Request] = [payload]
             while events and events[0][0] == now and events[0][2] == _ARRIVAL:
                 arrivals.append(heapq.heappop(events)[3])
@@ -427,29 +450,31 @@ def run_event_loop(
             # the high-load case where the vectorized scoring pass pays.
             # ``pending_offset`` keeps count-based policies seeing buffered
             # requests as if they were already delivered.
+            # simlint: ignore[R5] -- one routing buffer per burst, replacing per-request scheduler calls with one bulk delivery per worker
             buffered: dict[int, list[Request]] = {}
             for req in arrivals:
                 w = pick(req, now, pool) if n > 1 else 0
                 pool.charge(w, req)
                 if pool.busy[w]:
+                    # simlint: ignore[R5] -- group list created once per (burst, worker), not per request
                     buffered.setdefault(w, []).append(req)
                     pool.pending_offset[w] += 1
                 else:
-                    t0 = _time.perf_counter()
+                    t0 = _time.perf_counter()  # simlint: ignore[R1] -- overhead meter, not sim time
                     workers[w].scheduler.on_arrival(req, now)
-                    sched_time += _time.perf_counter() - t0
+                    sched_time += _time.perf_counter() - t0  # simlint: ignore[R1] -- overhead meter, not sim time
                     try_dispatch(w, now)
             for w, group in buffered.items():
                 pool.pending_offset[w] = 0
                 sched = workers[w].scheduler
                 deliver = getattr(sched, "on_arrivals", None)
-                t0 = _time.perf_counter()
+                t0 = _time.perf_counter()  # simlint: ignore[R1] -- overhead meter, not sim time
                 if deliver is not None:
                     deliver(group, now)
                 else:
                     for req in group:
                         sched.on_arrival(req, now)
-                sched_time += _time.perf_counter() - t0
+                sched_time += _time.perf_counter() - t0  # simlint: ignore[R1] -- overhead meter, not sim time
         elif kind == _DONE:
             w, batch = payload
             pool.busy[w] = False
@@ -457,11 +482,12 @@ def run_event_loop(
             n_batches += 1
             for r in batch.requests:
                 r.finished = now
-            t0 = _time.perf_counter()
+            t0 = _time.perf_counter()  # simlint: ignore[R1] -- overhead meter, not sim time
             workers[w].scheduler.on_batch_done(
+                # simlint: ignore[R5] -- one alone-times list per completed batch (feedback path), not per request
                 batch, now, [r.true_time for r in batch.requests]
             )
-            sched_time += _time.perf_counter() - t0
+            sched_time += _time.perf_counter() - t0  # simlint: ignore[R1] -- overhead meter, not sim time
             try_dispatch(w, now)
         else:  # _WAKE
             w = payload
@@ -483,7 +509,7 @@ def run_event_loop(
         n_dropped=dropped,
         n_unserved=unserved,
         worker_busy=worker_busy_time,
-        makespan=last_time,
+        makespan_ms=last_time,
         latencies=lat,
         n_workers=n,
         peak_heap_size=peak_heap,
@@ -495,7 +521,7 @@ def run_event_loop(
 
 def simulate(
     requests: Sequence[Request],
-    scheduler,
+    scheduler: SchedulerLike,
     executor: Executor,
     horizon: float | None = None,
     charge_scheduler_overhead: bool = False,

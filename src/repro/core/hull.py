@@ -58,7 +58,11 @@ class _Block:
         ]
 
     @staticmethod
-    def _bad(a, b, c) -> bool:
+    def _bad(
+        a: tuple[int, float, float],
+        b: tuple[int, float, float],
+        c: tuple[int, float, float],
+    ) -> bool:
         # b is never the max if c overtakes a no later than b does.
         #   (c_beta - a_beta)/(a_alpha - c_alpha) <= (b_beta - a_beta)/(a_alpha - b_alpha)
         return (c[2] - a[2]) * (b[1] - a[1]) >= (b[2] - a[2]) * (c[1] - a[1])
@@ -158,7 +162,7 @@ class HullQueue:
         if self._dead > max(8, len(self._alive)):
             self._compact()
 
-    def _push_block(self, lines) -> None:
+    def _push_block(self, lines: list[tuple[int, float, float]]) -> None:
         self._blocks.append(_Block(lines))
         # Binary-counter merging keeps O(log n) blocks, geometric sizes.
         while (

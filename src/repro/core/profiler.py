@@ -10,7 +10,6 @@ from __future__ import annotations
 
 import dataclasses
 from collections import defaultdict, deque
-from typing import Callable
 
 import numpy as np
 
@@ -43,17 +42,19 @@ class OnlineProfiler:
         self._dirty = False
 
     # -- ingestion ----------------------------------------------------------
-    def seed_history(self, app_id: str, alone_times, now: float = 0.0) -> None:
+    def seed_history(
+        self, app_id: str, alone_times_ms: Sequence[float], now: float = 0.0
+    ) -> None:
         """Warm-start from historical data (the paper assumes SLOs and
         distributions are derived from historical observations)."""
-        for x in alone_times:
+        for x in alone_times_ms:
             self._samples[app_id].append((now, float(x)))
         self._dirty = True
 
-    def observe(self, app_id: str, alone_time: float, now: float) -> None:
+    def observe(self, app_id: str, alone_time_ms: float, now: float) -> None:
         """Called when a finished request is (probabilistically) sampled."""
         if self._rng.random() <= self.cfg.sample_rate:
-            self._samples[app_id].append((now, float(alone_time)))
+            self._samples[app_id].append((now, float(alone_time_ms)))
             self._dirty = True
 
     # -- pickup -------------------------------------------------------------

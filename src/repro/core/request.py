@@ -11,7 +11,7 @@ from __future__ import annotations
 
 import dataclasses
 import itertools
-from typing import Any, Sequence
+from typing import Any
 
 __all__ = ["StepCost", "PiecewiseStepCost", "Request"]
 

@@ -234,15 +234,15 @@ class OrlojScheduler:
         all_bs = set(self._bs_state)
         for req, rid in zip(reqs, rids):
             self._pending[rid] = req
+            # simlint: ignore[R5] -- per-request feasibility state is the data structure itself, not transient churn; the drop phase mutates it per batch size
             self._feasible[rid] = set(all_bs)
         heap_entries = [(r.release + r.slo, r.rid) for r in reqs]
         for bs, st in self._bs_state.items():
             alpha, beta, miles = _score_flat(
                 st.score_model, deadlines, costs, seg_starts, now, self._base
             )
-            st.hull.insert_many(
-                list(zip(rids, alpha.tolist(), beta.tolist()))
-            )
+            # simlint: ignore[R5] -- one bulk hull-block load per batch size (not per request); this *is* the PR-2 vectorized path replacing n scalar inserts
+            st.hull.insert_many(list(zip(rids, alpha.tolist(), beta.tolist())))
             for entry in heap_entries:
                 heapq.heappush(st.deadline_heap, entry)
             for rid, m in zip(rids, miles.tolist()):
@@ -250,11 +250,11 @@ class OrlojScheduler:
                     heapq.heappush(self._milestones, (m, rid, bs))
 
     def on_batch_done(
-        self, batch: Batch, now: float, alone_times: Sequence[float]
+        self, batch: Batch, now: float, alone_times_ms: Sequence[float]
     ) -> None:
         """Feedback: sampled finished requests go to the async profiler."""
-        for req, alone in zip(batch.requests, alone_times):
-            self.profiler.observe(req.app_id, alone, now)
+        for req, alone_ms in zip(batch.requests, alone_times_ms):
+            self.profiler.observe(req.app_id, alone_ms, now)
         snap = self.profiler.maybe_pickup(now)
         if snap:
             self._app_dists = snap
@@ -312,7 +312,7 @@ class OrlojScheduler:
                 due.setdefault(bs, set()).add(rid)
         for bs, rid_set in due.items():
             st = self._bs_state[bs]
-            rids = list(rid_set)
+            rids = sorted(rid_set)  # deterministic re-score order (R4)
             reqs = [self._pending[rid] for rid in rids]
             deadlines, costs, seg_starts = _flatten_steps(reqs)
             alpha, beta, miles = _score_flat(
@@ -349,7 +349,7 @@ class OrlojScheduler:
                     break  # heap is deadline-ordered; the rest are feasible
 
     def _remove(self, rid: int) -> None:
-        for bs in self._feasible.pop(rid, set()):
+        for bs in sorted(self._feasible.pop(rid, set())):
             st = self._bs_state[bs]
             if rid in st.hull:
                 st.hull.delete(rid)

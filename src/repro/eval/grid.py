@@ -31,6 +31,8 @@ over them.
 
 from __future__ import annotations
 
+from typing import Sequence
+
 from .spec import ExperimentSpec
 
 __all__ = ["GRIDS", "SYSTEMS", "tiny", "small", "full", "engine_smoke"]
@@ -50,7 +52,11 @@ _SMALL_SEEDS = (7, 11, 23, 31, 43)
 
 
 def _conformance(
-    cases, slos, seeds, n_requests: int, systems=SYSTEMS
+    cases: Sequence[tuple[str, str, dict, float]],
+    slos: Sequence[float],
+    seeds: Sequence[int],
+    n_requests: int,
+    systems: Sequence[str] = SYSTEMS,
 ) -> list[ExperimentSpec]:
     return [
         ExperimentSpec(
@@ -183,7 +189,7 @@ _SLOS_FAST = (1.5, 3.0, 5.0)
 def _table_specs(
     table: str,
     cases: list[tuple[str, str, dict]],
-    slos,
+    slos: Sequence[float],
     *,
     utilization: float = 0.85,
     n_requests: int = 1200,

@@ -49,7 +49,7 @@ def main(argv: list[str] | None = None) -> int:
     args = ap.parse_args(argv)
 
     specs = GRIDS[args.grid]()
-    t0 = time.time()
+    t0 = time.time()  # simlint: ignore[R1] -- CLI progress banner, reporting only
     print(f"# grid {args.grid}: {len(specs)} cells, jobs={args.jobs or 'auto'}",
           file=sys.stderr, flush=True)
     results = run_specs(specs, jobs=args.jobs)
@@ -57,6 +57,7 @@ def main(argv: list[str] | None = None) -> int:
     drift = drift_report(results)
     extra = {"engine_drift": drift} if drift else None
     write_artifact(args.out, results, grid=args.grid, claims=claims, extra=extra)
+    # simlint: ignore[R1] -- CLI progress banner, reporting only
     print(f"# {len(results)} results -> {args.out} ({time.time() - t0:.1f}s)",
           file=sys.stderr)
     print(format_report(claims, verbose=args.verbose))

@@ -65,6 +65,7 @@ from .workloads import build_workload
 
 if TYPE_CHECKING:  # pragma: no cover - typing only, keeps jax out of import
     from ..core.distributions import BatchLatencyModel
+    from ..core.eventloop import Worker
     from ..serving.engine import ServingEngine
 
 __all__ = [
@@ -305,7 +306,15 @@ class _PredictedExecutor:
         return self.lm.c0 + self.lm.c1 * k * size
 
 
-def _pool(spec: ExperimentSpec, lm, rs, engine, batch_sizes, *, predicted: bool):
+def _pool(
+    spec: ExperimentSpec,
+    lm: "BatchLatencyModel",
+    rs: RequestSet,
+    engine: "ServingEngine",
+    batch_sizes: tuple[int, ...],
+    *,
+    predicted: bool,
+) -> "list[Worker]":
     """Build the worker pool for one engine cell (or its sim twin) — same
     shared pool builder as the sim substrate, with the executor swapped."""
     from .runner import _build_pool
@@ -325,7 +334,7 @@ def run_engine_spec(spec: ExperimentSpec) -> ExperimentResult:
     """Run one ``substrate="engine"`` cell and fold the measured replay
     into the standard :class:`ExperimentResult` schema (so the claims
     layer consumes it unmodified)."""
-    t_wall = time.perf_counter()
+    t_wall = time.perf_counter()  # simlint: ignore[R1] -- wall_time_s metadata column; engine cells measure real hardware by design
     kind, model = parse_substrate(spec.substrate)
     if kind != "engine":
         raise ValueError(f"run_engine_spec got a {kind!r} spec: {spec}")
@@ -411,6 +420,7 @@ def run_engine_spec(spec: ExperimentSpec) -> ExperimentResult:
     from .runner import _fold_result
 
     return _fold_result(
+        # simlint: ignore[R1] -- wall_time_s metadata column; engine cells measure real hardware by design
         spec, rs, res, time.perf_counter() - t_wall, substrate_meta=meta
     )
 

@@ -9,7 +9,9 @@ bit-for-bit.  Each family maps onto one of the §5 synthesis helpers in
 
 from __future__ import annotations
 
-from typing import Callable, Mapping, Sequence
+from typing import Callable, Mapping
+
+import numpy as np
 
 from ..serving.workload import (
     AppWorkload,
@@ -68,7 +70,7 @@ DYNAMIC_FAMILIES = frozenset({"bimodal", "unequal_bimodal", "k_modal", "real"})
 def _scaled_app(app: AppWorkload, scale: float) -> AppWorkload:
     sampler = app.sampler
 
-    def f(rng, n):
+    def f(rng: np.random.Generator, n: int) -> np.ndarray:
         return sampler(rng, n) * scale
 
     return type(app)(app.app_id, f, app.weight)

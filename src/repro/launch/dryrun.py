@@ -196,7 +196,7 @@ def run_one(
     if cfg_override:
         cfg = dataclasses.replace(cfg, **cfg_override)
     model = Model(cfg)
-    t0 = time.time()
+    t0 = time.time()  # simlint: ignore[R1] -- measures real compile time (the artifact's `seconds` field)
     res = DryRunResult(arch=arch, shape=shape_name, mesh=mesh_name, ok=False, seconds=0)
     try:
         params_shape = jax.eval_shape(model.init, jax.random.PRNGKey(0))
@@ -215,8 +215,6 @@ def run_one(
         pspecs = param_specs(cfg, params_shape, mesh, moe_ff_axis=moe_ff_axis or None)
         p_sh = to_named(mesh, pspecs)
         ins = input_specs(cfg, shape, model)
-        import contextlib
-
         # Active mesh context so P-only with_sharding_constraint inside
         # blocks (fsdp_weight_gather) resolves during lowering.
         mesh_ctx = jax.set_mesh(mesh)
@@ -307,7 +305,7 @@ def run_one(
         res.ok = True
     except Exception:
         res.error = traceback.format_exc()[-4000:]
-    res.seconds = time.time() - t0
+    res.seconds = time.time() - t0  # simlint: ignore[R1] -- measures real compile time (the artifact's `seconds` field)
     if save:
         ART_DIR.mkdir(parents=True, exist_ok=True)
         out = dataclasses.asdict(res)

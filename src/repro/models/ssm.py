@@ -160,7 +160,7 @@ def mamba_decode(
 # =====================================================================
 def init_mlstm(rng, d: int, n_heads: int) -> Params:
     hd = d // n_heads
-    ks = jax.random.split(rng, 6)
+    ks = jax.random.split(rng, 7)
     return {
         "wq": _init(ks[0], (d, n_heads, hd)),
         "wk": _init(ks[1], (d, n_heads, hd)),
@@ -168,7 +168,7 @@ def init_mlstm(rng, d: int, n_heads: int) -> Params:
         "w_i": _init(ks[3], (d, n_heads)),
         "w_f": _init(ks[4], (d, n_heads)),
         "w_o": _init(ks[5], (d, d)),
-        "out": _init(jax.random.fold_in(rng, 7), (d, d)),
+        "out": _init(ks[6], (d, d)),
     }
 
 

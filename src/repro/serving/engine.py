@@ -93,9 +93,9 @@ class JaxExecutor:
             # warm the cache so compile time never pollutes a measurement
             jax.block_until_ready(self._fwd(self.params, batch))
             self._compiled.add(key)
-        t0 = time.perf_counter()
+        t0 = time.perf_counter()  # simlint: ignore[R1] -- this executor's whole job is measuring real batch latency
         jax.block_until_ready(self._fwd(self.params, batch))
-        return (time.perf_counter() - t0) * 1e3, k
+        return (time.perf_counter() - t0) * 1e3, k  # simlint: ignore[R1] -- real batch latency measurement
 
     def __call__(self, batch: Batch, now: float) -> float:
         # Admission (make_requests) caps lengths at the largest bucket, so

@@ -1,0 +1,547 @@
+"""Tests for the ``repro.analysis`` static-analysis pass (DESIGN.md §9).
+
+Every rule gets a positive fixture (must flag) and a negative fixture
+(must stay silent) fed through :func:`analyze_source` with a *virtual*
+path inside the rule's zone — no files on disk, no jax import: the pass
+is AST-only, so this file runs in the bare-env CI job too.
+"""
+
+import json
+import textwrap
+
+from repro.analysis import (
+    ALL_RULES,
+    Baseline,
+    analyze_source,
+    diff_against_baseline,
+    fingerprint,
+    get_rules,
+)
+from repro.analysis.cli import main
+
+CORE = "src/repro/core/fake.py"
+
+
+def run(source, path=CORE, rules=None):
+    return analyze_source(textwrap.dedent(source), path, rules or ALL_RULES)
+
+
+def rule_ids(findings):
+    return [f.rule for f in findings]
+
+
+# ---------------------------------------------------------------- R1
+def test_r1_flags_wallclock_and_global_rng():
+    active, _ = run(
+        """
+        import time, random
+        import numpy as np
+
+        def f():
+            t = time.time()
+            random.shuffle([1, 2])
+            rng = np.random.default_rng()
+            return t, rng
+        """
+    )
+    assert rule_ids(active) == ["R1", "R1", "R1"]
+    assert "time.time" in active[0].message
+
+
+def test_r1_silent_on_seeded_rng_and_outside_zone():
+    src = """
+    import numpy as np
+
+    def f(seed):
+        return np.random.default_rng(seed).normal()
+    """
+    active, _ = run(src)
+    assert active == []
+    # the same wall-clock code outside the determinism zones is fine
+    active, _ = run("import time\nt = time.time()\n", path="src/repro/models/x.py")
+    assert active == []
+
+
+def test_r1_resolves_import_aliases():
+    active, _ = run(
+        """
+        import time as _time
+
+        def f():
+            return _time.perf_counter()
+        """
+    )
+    assert rule_ids(active) == ["R1"]
+
+
+# ---------------------------------------------------------------- R2
+def test_r2_flags_fold_after_split():
+    # the models/ssm.py probe shape this rule was built around
+    active, _ = run(
+        """
+        import jax
+
+        def init(rng):
+            ks = jax.random.split(rng, 6)
+            return jax.random.fold_in(rng, 7)
+        """,
+        path="src/repro/models/fake.py",
+    )
+    assert rule_ids(active) == ["R2"]
+    assert "split" in active[0].message
+
+
+def test_r2_flags_sampler_then_split():
+    active, _ = run(
+        """
+        import jax
+
+        def f(key):
+            x = jax.random.normal(key, (4,))
+            a, b = jax.random.split(key)
+            return x, a, b
+        """,
+        path="src/repro/models/fake.py",
+    )
+    assert rule_ids(active) == ["R2"]
+
+
+def test_r2_approves_fold_in_fanout_and_carry_rebind():
+    active, _ = run(
+        """
+        import jax
+
+        def fanout(rng, n):
+            return [jax.random.fold_in(rng, i) for i in range(n)]
+
+        def carry(rng):
+            for _ in range(3):
+                rng, sub = jax.random.split(rng)
+                x = jax.random.normal(sub, ())
+            return x
+        """,
+        path="src/repro/models/fake.py",
+    )
+    assert active == []
+
+
+def test_r2_catches_loop_carried_reuse():
+    active, _ = run(
+        """
+        import jax
+
+        def f(rng):
+            out = []
+            for i in range(3):
+                out.append(jax.random.normal(rng, ()))
+            return out
+        """,
+        path="src/repro/models/fake.py",
+    )
+    assert rule_ids(active) == ["R2"]
+
+
+def test_r2_repo_probe_is_fixed():
+    # regression for the init_mlstm fold_in-after-split collision: the real
+    # file must stay clean under R2
+    source = open("src/repro/models/ssm.py", encoding="utf-8").read()
+    active, _ = analyze_source(source, "src/repro/models/ssm.py", get_rules(["R2"]))
+    assert active == []
+
+
+# ---------------------------------------------------------------- R3
+def test_r3_flags_bare_time_names_at_boundaries():
+    active, _ = run(
+        """
+        class Cfg:
+            deadline: float
+
+        def schedule(batch, timeout):
+            return batch, timeout
+        """
+    )
+    assert rule_ids(active) == ["R3", "R3"]
+    assert "Cfg.deadline" in active[0].message
+
+
+def test_r3_silent_on_suffixed_and_private():
+    active, _ = run(
+        """
+        class Cfg:
+            deadline_ms: float
+
+        def schedule(batch, timeout_s):
+            return batch, timeout_s
+
+        def _helper(deadline):
+            return deadline
+        """
+    )
+    assert active == []
+
+
+def test_r3_flags_mixed_unit_arithmetic():
+    active, _ = run(
+        """
+        def f(a_ms, b_s):
+            bad = a_ms + b_s
+            also_bad = a_ms < b_s
+            fine = a_ms + b_s * 1e3
+            return bad, also_bad, fine
+        """
+    )
+    assert rule_ids(active) == ["R3", "R3"]
+
+
+# ---------------------------------------------------------------- R4
+def test_r4_flags_set_iteration_and_conversion():
+    active, _ = run(
+        """
+        def f(pending):
+            ready = set(pending)
+            for rid in ready:
+                emit(rid)
+            return list({1, 2} | ready)
+        """
+    )
+    assert rule_ids(active) == ["R4", "R4"]
+
+
+def test_r4_flags_defaulting_pop_pattern():
+    active, _ = run(
+        """
+        def remove(table, rid):
+            for bs in table.pop(rid, set()):
+                drop(bs)
+        """
+    )
+    assert rule_ids(active) == ["R4"]
+
+
+def test_r4_approves_sorted_and_dict_iteration():
+    active, _ = run(
+        """
+        def f(pending, d):
+            for rid in sorted(set(pending)):
+                emit(rid)
+            for k, v in d.items():
+                emit(k, v)
+            return max({1, 2}), len({3})
+        """
+    )
+    assert active == []
+
+
+def test_r4_rebinding_to_list_clears_set_mark():
+    active, _ = run(
+        """
+        def f(pending):
+            xs = set(pending)
+            xs = sorted(xs)
+            for x in xs:
+                emit(x)
+        """
+    )
+    assert active == []
+
+
+# ---------------------------------------------------------------- R5
+SCHED = "src/repro/core/scheduler.py"
+
+
+def test_r5_flags_alloc_in_hot_loop():
+    active, _ = run(
+        """
+        class OrlojScheduler:
+            def on_arrivals(self, reqs, now):
+                for r in reqs:
+                    self.feasible[r.rid] = set(self.sizes)
+        """,
+        path=SCHED,
+    )
+    assert rule_ids(active) == ["R5"]
+
+
+def test_r5_silent_outside_hot_functions_and_loops():
+    active, _ = run(
+        """
+        class OrlojScheduler:
+            def on_arrivals(self, reqs, now):
+                bulk = [r.rid for r in reqs]  # outside a loop body: bulk
+                self.hull.insert_many(bulk)
+
+            def cold_helper(self, reqs):
+                for r in reqs:
+                    box = [r]
+        """,
+        path=SCHED,
+    )
+    assert active == []
+
+
+def test_r5_only_applies_to_listed_files():
+    active, _ = run(
+        """
+        class OrlojScheduler:
+            def on_arrivals(self, reqs, now):
+                for r in reqs:
+                    box = [r]
+        """,
+        path="src/repro/core/other.py",
+    )
+    assert active == []
+
+
+# ---------------------------------------------------------------- R6
+KERN = "src/repro/kernels/fake.py"
+
+
+def test_r6_flags_python_branch_on_traced_value():
+    active, _ = run(
+        """
+        import jax
+
+        @jax.jit
+        def f(x):
+            if x > 0:
+                return x
+            return -x
+        """,
+        path=KERN,
+    )
+    assert rule_ids(active) == ["R6"]
+
+
+def test_r6_flags_host_calls_in_pallas_kernel():
+    active, _ = run(
+        """
+        import functools
+        import jax.experimental.pallas as pl
+
+        def _kernel(x_ref, o_ref, *, block: int):
+            print(x_ref)
+            o_ref[...] = x_ref[...]
+
+        def op(x, block):
+            return pl.pallas_call(
+                functools.partial(_kernel, block=block),
+                out_shape=x,
+            )(x)
+        """,
+        path=KERN,
+    )
+    assert rule_ids(active) == ["R6"]
+
+
+def test_r6_approves_static_idioms():
+    active, _ = run(
+        """
+        import functools
+        import jax
+
+        @functools.partial(jax.jit, static_argnames=("mode",))
+        def f(x, lengths=None, *, mode="a"):
+            if lengths is None:
+                lengths = x
+            if x.shape[0] > 4:
+                return lengths
+            if mode == "b":
+                return x
+            return x + lengths
+        """,
+        path=KERN,
+    )
+    assert active == []
+
+
+# ------------------------------------------------------- suppressions
+def test_suppression_same_line_and_line_above():
+    src = """
+    import time
+
+    def f():
+        a = time.time()  # simlint: ignore[R1] -- measured wall time
+        # simlint: ignore[R1] -- measured wall time
+        b = time.time()
+        return a, b
+    """
+    active, silenced = run(src)
+    assert active == []
+    assert len(silenced) == 2
+    assert all(sup.justified for _, sup in silenced)
+
+
+def test_suppression_without_justification_is_tracked():
+    active, silenced = run(
+        """
+        import time
+
+        def f():
+            return time.time()  # simlint: ignore[R1]
+        """
+    )
+    assert active == []
+    assert [sup.justified for _, sup in silenced] == [False]
+
+
+def test_suppression_wrong_rule_id_does_not_silence():
+    active, silenced = run(
+        """
+        import time
+
+        def f():
+            return time.time()  # simlint: ignore[R4] -- wrong id
+        """
+    )
+    assert rule_ids(active) == ["R1"]
+    assert silenced == []
+
+
+def test_skip_file_directive():
+    active, silenced = run(
+        """
+        # simlint: skip-file
+        import time
+        t = time.time()
+        """
+    )
+    assert active == [] and silenced == []
+
+
+# ------------------------------------------------------------ baseline
+def test_baseline_round_trip(tmp_path):
+    active, _ = run(
+        """
+        import time
+
+        def f():
+            return time.time()
+        """
+    )
+    base = Baseline.from_findings(active)
+    path = tmp_path / "base.json"
+    base.save(path)
+    loaded = Baseline.load(path)
+    assert loaded.counts == base.counts
+
+    new, stale = diff_against_baseline(active, loaded)
+    assert new == [] and stale == []
+    # a fresh finding not in the baseline is new
+    new, _ = diff_against_baseline(active + active, loaded)
+    assert len(new) == 1
+    # a fixed finding leaves a stale entry behind
+    _, stale = diff_against_baseline([], loaded)
+    assert stale == [fingerprint(active[0])]
+
+
+def test_baseline_fingerprint_ignores_line_numbers():
+    a1, _ = run("import time\n\ndef f():\n    return time.time()\n")
+    a2, _ = run("import time\n\n\n\ndef f():\n    return time.time()\n")
+    assert a1[0].line != a2[0].line
+    assert fingerprint(a1[0]) == fingerprint(a2[0])
+
+
+def test_missing_baseline_loads_empty(tmp_path):
+    assert Baseline.load(tmp_path / "absent.json").counts == {}
+
+
+# ----------------------------------------------------------------- CLI
+def _write(tmp_path, rel, text):
+    p = tmp_path / rel
+    p.parent.mkdir(parents=True, exist_ok=True)
+    p.write_text(textwrap.dedent(text), encoding="utf-8")
+    return p
+
+
+def test_cli_clean_tree_exits_zero(tmp_path, monkeypatch, capsys):
+    _write(tmp_path, "src/repro/core/ok.py", "def f(x_ms):\n    return x_ms\n")
+    monkeypatch.chdir(tmp_path)
+    assert main(["--check", "--no-baseline", "src"]) == 0
+
+
+def test_cli_injected_positive_exits_one(tmp_path, monkeypatch, capsys):
+    _write(
+        tmp_path,
+        "src/repro/core/bad.py",
+        "import time\n\ndef f():\n    return time.time()\n",
+    )
+    monkeypatch.chdir(tmp_path)
+    assert main(["--check", "--no-baseline", "src"]) == 1
+    out = capsys.readouterr().out
+    assert "[R1/determinism-wallclock]" in out
+
+
+def test_cli_check_rejects_unjustified_suppression(tmp_path, monkeypatch, capsys):
+    _write(
+        tmp_path,
+        "src/repro/core/bad.py",
+        "import time\n\ndef f():\n    return time.time()  # simlint: ignore[R1]\n",
+    )
+    monkeypatch.chdir(tmp_path)
+    assert main(["--check", "--no-baseline", "src"]) == 1
+    assert "justification" in capsys.readouterr().err
+
+
+def test_cli_baseline_ratchet(tmp_path, monkeypatch, capsys):
+    _write(
+        tmp_path,
+        "src/repro/core/old.py",
+        "import time\n\ndef f():\n    return time.time()\n",
+    )
+    monkeypatch.chdir(tmp_path)
+    assert main(["--write-baseline", "src"]) == 0
+    # grandfathered finding passes the gate
+    assert main(["--check", "src"]) == 0
+    # a second, new finding fails it
+    _write(
+        tmp_path,
+        "src/repro/core/new.py",
+        "import time\n\ndef g():\n    return time.time()\n",
+    )
+    assert main(["--check", "src"]) == 1
+
+
+def test_cli_json_report(tmp_path, monkeypatch, capsys):
+    _write(
+        tmp_path,
+        "src/repro/core/bad.py",
+        "import time\n\ndef f():\n    return time.time()\n",
+    )
+    monkeypatch.chdir(tmp_path)
+    assert main(["--json", "--no-baseline", "src"]) == 0
+    doc = json.loads(capsys.readouterr().out)
+    assert doc["summary"]["total"] == 1
+    assert doc["findings"][0]["rule"] == "R1"
+    assert doc["findings"][0]["new"] is True
+
+
+def test_cli_unknown_rule_exits_two(capsys):
+    assert main(["--rules", "R99", "src"]) == 2
+
+
+def test_cli_syntax_error_exits_two(tmp_path, monkeypatch, capsys):
+    _write(tmp_path, "src/repro/core/broken.py", "def f(:\n")
+    monkeypatch.chdir(tmp_path)
+    assert main(["--check", "--no-baseline", "src"]) == 2
+
+
+def test_cli_list_rules(capsys):
+    assert main(["--list-rules"]) == 0
+    out = capsys.readouterr().out
+    for rid in ("R1", "R2", "R3", "R4", "R5", "R6"):
+        assert rid in out
+
+
+# --------------------------------------------------------- repo gate
+def test_repo_head_passes_the_gate(monkeypatch, capsys):
+    """`python -m repro.analysis --check src tests` must be green at HEAD."""
+    import pathlib
+
+    repo_root = pathlib.Path(__file__).resolve().parent.parent
+    monkeypatch.chdir(repo_root)
+    assert main(["--check", "src", "tests"]) == 0
+
+
+def test_get_rules_selectors():
+    assert [r.rule_id for r in get_rules(["R1", "prng-key-reuse"])] == ["R1", "R2"]
+    assert len(get_rules(None)) == 6

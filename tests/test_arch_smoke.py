@@ -16,7 +16,7 @@ BATCH, SEQ = 2, 32
 def _batch(model: Model, rng):
     cfg = model.cfg
     front = cfg.n_frontend_tokens
-    k_in, k_lab = jax.random.split(rng)
+    k_in, k_tok, k_lab = jax.random.split(rng, 3)
     b: dict = {}
     if cfg.frontend == "audio":
         b["frontend_embeds"] = jax.random.normal(
@@ -27,7 +27,7 @@ def _batch(model: Model, rng):
         b["frontend_embeds"] = jax.random.normal(
             k_in, (BATCH, front, model.frontend_dim), jnp.float32
         )
-        b["tokens"] = jax.random.randint(k_in, (BATCH, SEQ - front), 0, cfg.vocab_size)
+        b["tokens"] = jax.random.randint(k_tok, (BATCH, SEQ - front), 0, cfg.vocab_size)
         labels = jax.random.randint(k_lab, (BATCH, SEQ), 0, cfg.vocab_size)
         b["labels"] = labels.at[:, :front].set(-100)  # mask image positions
     else:
@@ -85,6 +85,23 @@ def test_decode_step(arch):
         not np.array_equal(np.asarray(a), np.asarray(b))
         for a, b in zip(leaves2, leaves3)
     ), f"{arch}: cache not updated"
+
+
+def test_mlstm_init_key_discipline():
+    """Regression for the fold_in-after-split collision in ``init_mlstm``:
+    every weight must come from a distinct split child, deterministically."""
+    from repro.models.ssm import init_mlstm
+
+    p1 = init_mlstm(jax.random.PRNGKey(0), 64, 4)
+    p2 = init_mlstm(jax.random.PRNGKey(0), 64, 4)
+    for k in p1:
+        assert np.array_equal(np.asarray(p1[k]), np.asarray(p2[k])), k
+    # a different seed must move every weight, including "out" (previously
+    # derived from the already-split parent key)
+    p3 = init_mlstm(jax.random.PRNGKey(1), 64, 4)
+    assert not np.array_equal(np.asarray(p1["out"]), np.asarray(p3["out"]))
+    # same-shape weights within one init must not coincide (distinct keys)
+    assert not np.array_equal(np.asarray(p1["out"]), np.asarray(p1["w_o"]))
 
 
 @pytest.mark.parametrize("arch", ["glm4_9b", "hymba_1_5b", "xlstm_1_3b"])

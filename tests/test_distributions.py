@@ -1,7 +1,6 @@
 """Tests for empirical distributions and order statistics (paper §4.2)."""
 
 import numpy as np
-import pytest
 try:
     from hypothesis import given, settings
     from hypothesis import strategies as st

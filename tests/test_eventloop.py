@@ -1,6 +1,5 @@
 """Tests for the unified multi-worker discrete-event engine."""
 
-import numpy as np
 import pytest
 
 from repro.core import (
@@ -53,7 +52,7 @@ def test_one_worker_reproduces_simulate_bitwise():
         "n_dropped",
         "n_unserved",
         "worker_busy",
-        "makespan",
+        "makespan_ms",
         "n_workers",
         "peak_heap_size",
     ):
@@ -107,8 +106,8 @@ def test_makespan_and_utilization_are_honest():
     assert pool.n_workers == 3
     # same trace: the pool's clock ends within ~one batch of the
     # single-worker clock, nowhere near 3× (the old makespan=last·n hack)
-    assert pool.makespan < 1.5 * one.makespan
-    assert pool.worker_busy <= pool.makespan * pool.n_workers + 1e-9
+    assert pool.makespan_ms < 1.5 * one.makespan_ms
+    assert pool.worker_busy <= pool.makespan_ms * pool.n_workers + 1e-9
     assert pool.utilization <= 1.0 + 1e-9
     # a 3-replica pool at 2× one-worker load must beat the single worker
     assert pool.finish_rate > one.finish_rate
@@ -166,7 +165,7 @@ def test_horizon_truncates_pool_run():
     assert res.n_unserved > 0
     # honest truncation: the clock reads the horizon, not the first event
     # beyond it, and busy time inside the window keeps utilization ≤ 1
-    assert res.makespan == 1.0
+    assert res.makespan_ms == 1.0
     assert 0.0 <= res.utilization <= 1.0 + 1e-9
 
 

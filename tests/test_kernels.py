@@ -1,7 +1,6 @@
 """Pallas kernel validation: sweep shapes/dtypes, assert_allclose against
 the pure-jnp oracles (interpret=True executes the kernel body on CPU)."""
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

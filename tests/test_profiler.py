@@ -4,7 +4,6 @@ a picked-up distribution reflects only in-window samples."""
 
 from __future__ import annotations
 
-import numpy as np
 
 from repro.core.profiler import OnlineProfiler, ProfilerConfig
 
