@@ -1,5 +1,6 @@
 """Fig. 12: priority-queue insertion / query microbenchmark, plus the
-end-to-end scheduler-throughput benchmark behind ``BENCH_sched.json``.
+end-to-end scheduler- and event-loop-throughput benchmarks behind
+``BENCH_sched.json``.
 
 Reproduces the O(log² n) scaling study for our Bentley–Saxe hull queue
 (the paper's Overmars–van Leeuwen replacement; DESIGN.md §Substitutions)
@@ -7,6 +8,12 @@ and tracks the §4.4 claim that per-request decisions stay cheap: the
 ``sched`` benchmark measures the arrival path (requests/second into a
 scheduler with n pending) and ``next_batch`` latency at n ∈ {1e2, 1e3,
 1e4}, against the pre-PR scalar baseline *recorded in the same run*.
+
+The ``eventloop`` benchmark (DESIGN.md §10) measures the event *engine*
+itself — events/second through ``run_event_loop`` on the scalar oracle
+loop vs the array engine at 10⁴/10⁵ requests — and feeds the ≥5× floor
+gated by ``repro.eval.sched_gate``.  Both benchmarks merge their section
+into ``BENCH_sched.json`` without clobbering the other's.
 """
 
 from __future__ import annotations
@@ -21,7 +28,25 @@ from repro.core import (
     EmpiricalDistribution,
     HullQueue,
     OrlojScheduler,
+    Request,
+    Worker,
+    run_event_loop,
 )
+from repro.core.scheduler import Batch
+
+
+def _merge_sched_artifact(json_path: str, update: dict) -> None:
+    """Read-modify-write ``BENCH_sched.json``: each benchmark owns its
+    keys, and regenerating one section never clobbers the other."""
+    try:
+        with open(json_path) as f:
+            doc = json.load(f)
+    except (FileNotFoundError, json.JSONDecodeError):
+        doc = {}
+    doc.update(update)
+    with open(json_path, "w") as f:
+        json.dump(doc, f, indent=2)
+        f.write("\n")
 
 
 def fig12_queue(full: bool = False) -> None:
@@ -215,13 +240,183 @@ def sched_throughput(full: bool = False,
             "next_batch_us": round(nb_us, 2),
         }
 
-    payload = {
+    _merge_sched_artifact(json_path, {
         "benchmark": "sched_throughput",
         "unit_note": "arrival path = full bookkeeping for one request "
                      "across all batch sizes (score + hull + heaps); "
                      "baseline = pre-PR scalar path recorded in this run",
         "sizes": out,
-    }
-    with open(json_path, "w") as f:
-        json.dump(payload, f, indent=2)
-        f.write("\n")
+    })
+
+
+# =====================================================================
+# End-to-end event-loop throughput (BENCH_sched.json, "eventloop" section)
+# =====================================================================
+
+class _FifoObjScheduler:
+    """Minimal object-path FIFO scheduler: append on arrival, pop up to
+    ``max_batch`` in order.  The benchmark isolates the event *engine*
+    (arrival delivery, completion processing, stats folding), so the
+    scheduler must be as close to free as possible — Orloj's scoring
+    would dominate and mask the engine difference being measured."""
+
+    reads_request_state = False
+
+    def __init__(self, max_batch: int = 256) -> None:
+        self.q: list[Request] = []
+        self.head = 0
+        self.max_batch = max_batch
+        self.n_timed_out = 0
+
+    def on_arrival(self, req: Request, now: float) -> None:
+        self.q.append(req)
+
+    def on_arrivals(self, reqs, now: float) -> None:
+        self.q.extend(reqs)
+
+    def next_batch(self, now: float):
+        k = min(self.max_batch, len(self.q) - self.head)
+        if k <= 0:
+            return None, None
+        picked = self.q[self.head:self.head + k]
+        self.head += k
+        if self.head > 1 << 16:
+            del self.q[:self.head]
+            self.head = 0
+        return Batch(picked, k), None
+
+    def on_batch_done(self, batch, now, alone) -> None:
+        pass
+
+    @property
+    def n_pending(self) -> int:
+        return len(self.q) - self.head
+
+
+class _FifoColsScheduler:
+    """Columnar twin of :class:`_FifoObjScheduler` for the array engine:
+    with a single worker, arrivals land in store order, so the pending
+    set is one contiguous ``[lo, hi)`` row window — batches carry
+    ``Batch.rows`` ranges and the engine's O(1) slice paths run.  Makes
+    the *same batching decisions* as the object FIFO on the same trace
+    (asserted by the benchmark), so the two engines do identical
+    scheduling work and the delta is pure engine overhead."""
+
+    reads_request_state = False
+
+    def __init__(self, max_batch: int = 256) -> None:
+        self.lo = 0
+        self.hi = 0
+        self.max_batch = max_batch
+        self.n_timed_out = 0
+        self.store = None
+
+    def on_arrival(self, req: Request, now: float) -> None:
+        raise RuntimeError("cols scheduler must be driven through the store")
+
+    def on_arrival_row(self, store, row: int, now: float) -> None:
+        self.store = store
+        self.hi = row + 1
+
+    def on_arrivals_cols(self, store, lo: int, hi: int, now: float) -> None:
+        self.store = store
+        self.hi = hi
+
+    def next_batch(self, now: float):
+        lo = self.lo
+        k = self.hi - lo
+        if k <= 0:
+            return None, None
+        if k > self.max_batch:
+            k = self.max_batch
+        self.lo = lo + k
+        return Batch(self.store.requests[lo:lo + k], k, rows=range(lo, lo + k)), None
+
+    def on_batch_done(self, batch, now, alone) -> None:
+        pass
+
+    @property
+    def n_pending(self) -> int:
+        return self.hi - self.lo
+
+
+class _ConstExecutor:
+    """Cheap deterministic Eq.-3-shaped batch time (no rng, no model)."""
+
+    def __call__(self, batch, now: float) -> float:
+        return 2.0 + 0.05 * len(batch.requests)
+
+
+def _eventloop_requests(
+    n: int, tick_ms: float, rate_per_ms: float, seed: int = 0
+) -> list[Request]:
+    """Poisson arrivals quantized to ``tick_ms`` (the front-end-drain
+    arrival shape the fleet grids replay; TraceConfig.tick_ms) with
+    generous SLOs, so the run measures engine throughput, not drops."""
+    rng = np.random.default_rng(seed)
+    at = np.cumsum(rng.exponential(1.0 / rate_per_ms, size=n))
+    if tick_ms > 0:
+        at = np.floor(at / tick_ms) * tick_ms
+    return [
+        Request(app_id="a", release=float(t), slo=100.0, true_time=1.0)
+        for t in at
+    ]
+
+
+def eventloop_throughput(full: bool = False,
+                         json_path: str = "BENCH_sched.json") -> None:
+    """Events/second through ``run_event_loop``, scalar oracle loop vs the
+    array engine, at 10⁴ and 10⁵ requests (an *event* is one arrival or
+    one batch completion).  Both engines replay the identical trace with
+    FIFO schedulers that make identical batching decisions (asserted), so
+    the ratio is pure engine speedup — the number the ≥5× sched_gate
+    floor tracks."""
+    tick_ms, rate_per_ms = 4.0, 64.0
+    sizes = (10_000, 100_000)
+    reps = 3
+    out: dict[str, dict[str, float]] = {}
+    for n in sizes:
+        master = _eventloop_requests(n, tick_ms, rate_per_ms)
+        results, rates = {}, {}
+        for engine, mk in (("scalar", _FifoObjScheduler),
+                           ("array", _FifoColsScheduler)):
+            best = float("inf")
+            for _ in range(reps):
+                reqs = [
+                    Request(app_id=r.app_id, release=r.release, slo=r.slo,
+                            true_time=r.true_time)
+                    for r in master
+                ]
+                workers = [Worker(mk(), _ConstExecutor())]
+                t0 = time.perf_counter()
+                res = run_event_loop(reqs, workers, engine=engine)
+                best = min(best, time.perf_counter() - t0)
+            results[engine] = res
+            rates[engine] = (res.n_total + res.n_batches) / best
+        sc, ar = results["scalar"], results["array"]
+        assert (sc.n_finished_ok, sc.n_finished_late, sc.n_batches) == (
+            ar.n_finished_ok, ar.n_finished_late, ar.n_batches
+        ), "engines diverged on the benchmark trace"
+        speedup = rates["array"] / rates["scalar"]
+        print(f"eventloop/array/n{n},{1e6 / rates['array']:.3f},"
+              f"scalar_us={1e6 / rates['scalar']:.3f} speedup={speedup:.1f}x",
+              flush=True)
+        out[str(n)] = {
+            "scalar_events_per_s": round(rates["scalar"], 1),
+            "array_events_per_s": round(rates["array"], 1),
+            "speedup": round(speedup, 2),
+            "n_events": sc.n_total + sc.n_batches,
+        }
+
+    _merge_sched_artifact(json_path, {
+        "eventloop": {
+            "unit_note": "events/s through run_event_loop (1 event = "
+                         "arrival or batch completion); identical "
+                         "tick-quantized trace and FIFO batching decisions "
+                         "on both engines, so speedup = engine overhead "
+                         "ratio; best of 3 reps",
+            "tick_ms": tick_ms,
+            "rate_per_ms": rate_per_ms,
+            "sizes": out,
+        },
+    })

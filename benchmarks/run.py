@@ -35,6 +35,7 @@ def main() -> None:
         "fig12": queue_micro.fig12_queue,
         "fig12b": queue_micro.fig12_mixed_ops,
         "sched": queue_micro.sched_throughput,  # writes BENCH_sched.json
+        "eventloop": queue_micro.eventloop_throughput,  # merges into BENCH_sched.json
         "fig13": sensitivity.fig13_b_sweep,
         "fig14": sensitivity.fig14_min_exec,
         "roofline": bench_roofline,

@@ -24,11 +24,16 @@ from typing import Iterator
 
 from ..core import FileContext, Finding
 
-# (path suffix, qualified scope) — the PR-2 hot path
+# (path suffix, qualified scope) — the PR-2 scheduler hot path plus the
+# PR-7 array event engine (the whole point of which is bulk columnar
+# work; a per-event container birth there is a regression)
 HOT_FUNCTIONS: tuple[tuple[str, str], ...] = (
     ("core/scheduler.py", "OrlojScheduler.on_arrivals"),
     ("core/scheduler.py", "OrlojScheduler.next_batch"),
     ("core/eventloop.py", "run_event_loop"),
+    ("core/eventloop.py", "run_event_loop.try_dispatch"),
+    ("core/eventloop.py", "_array_loop"),
+    ("core/eventloop.py", "_array_loop.try_dispatch"),
 )
 
 _CTOR_CALLS = {"list", "dict", "set"}

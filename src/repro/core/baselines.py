@@ -72,6 +72,12 @@ class _PointEstimator:
 
 
 class _BaselineBase:
+    # Most baselines never read ``req.started``/``req.finished`` inside
+    # their hooks, so the array event loop may defer those object writes to
+    # one end-of-run flush.  Schedulers that DO read them (Clipper's AIMD,
+    # adaptive Clockwork) override this.
+    reads_request_state = False
+
     def __init__(
         self,
         latency_model: BatchLatencyModel,
@@ -130,6 +136,8 @@ class ClockworkScheduler(_BaselineBase):
         kwargs.setdefault("estimator", "mean")
         super().__init__(*args, **kwargs)
         self.adaptive = adaptive
+        # adaptive mode observes finished-started durations in on_batch_done
+        self.reads_request_state = adaptive
         self.window_slack = window_slack  # ms tolerance on the action window
         self._bs_obs: dict[int, deque[float]] = {}
         self._obs_window = obs_window
@@ -286,6 +294,8 @@ class ClipperScheduler(_BaselineBase):
     """Clipper-style reactive AIMD adaptive batching, FIFO service."""
 
     name = "clipper"
+    # AIMD reads finished-started exec durations inside on_batch_done
+    reads_request_state = True
 
     def __init__(self, *args, **kwargs) -> None:
         kwargs.setdefault("estimator", "mean")

@@ -52,17 +52,21 @@ from __future__ import annotations
 import dataclasses
 import heapq
 import itertools
+import math
 import time as _time
 from typing import Callable, Protocol, Sequence
 
 import numpy as np
 
 from .distributions import BatchLatencyModel
+from .eventwheel import EventWheel
 from .request import Request
+from .requeststore import RequestStore
 from .scheduler import Batch
 
 __all__ = [
     "DISPATCH_POLICIES",
+    "ENGINES",
     "Executor",
     "ModelExecutor",
     "SchedulerLike",
@@ -315,6 +319,17 @@ DISPATCH_POLICIES: dict[str, Callable] = {
 
 _ARRIVAL, _DONE, _WAKE = 0, 1, 2
 
+# Array-loop merge sources (where the next dynamic event comes from).
+_TAKE_BUF, _TAKE_BUCKET, _TAKE_ONE = 1, 2, 3
+_NO_EVENT = (math.inf, -1)
+
+# Event-loop implementations.  ``scalar`` is the original heapq loop and
+# stays the oracle; ``array`` is the array-backed engine (RequestStore +
+# EventWheel, DESIGN.md §10) whose observable behaviour — every scheduler
+# hook call, timestamp, rng draw and result field — is bit-identical to
+# the oracle (regression-tested over the full small grid).
+ENGINES = ("scalar", "array")
+
 
 def run_event_loop(
     requests: Sequence[Request],
@@ -324,6 +339,7 @@ def run_event_loop(
     horizon: float | None = None,
     charge_scheduler_overhead: bool = False,
     seed: int = 0,
+    engine: str = "scalar",
 ) -> SimResult:
     """Drive ``workers`` replica schedulers against one arrival stream.
 
@@ -342,6 +358,16 @@ def run_event_loop(
     of each scheduler decision to the virtual clock (used by the Fig.-14
     overhead study: with ms-scale requests, scheduling time itself starts
     to matter).
+
+    ``engine`` picks the implementation (:data:`ENGINES`): ``"scalar"`` is
+    the original heapq loop (the oracle); ``"array"`` sources arrivals from
+    a :class:`~repro.core.requeststore.RequestStore` and DONE/WAKE events
+    from an :class:`~repro.core.eventwheel.EventWheel` — same observable
+    behaviour, built for 10⁵–10⁶-request traces.  ``peak_heap_size`` is the
+    one intentionally engine-specific field: both report peak *pending
+    events*, but the scalar heap retains superseded-wake tombstones
+    slightly differently than the wheel, so only the bound (not the exact
+    value) is comparable.
     """
     workers = list(workers)
     if not workers:
@@ -362,6 +388,19 @@ def run_event_loop(
                 f"unknown dispatch policy {policy!r}; "
                 f"known: {sorted(DISPATCH_POLICIES)}"
             ) from None
+    if engine not in ENGINES:
+        raise ValueError(
+            f"unknown engine {engine!r}; known: {list(ENGINES)}"
+        )
+    if engine == "array":
+        return _array_loop(
+            requests,
+            workers,
+            pool,
+            pick,
+            horizon=horizon,
+            charge_scheduler_overhead=charge_scheduler_overhead,
+        )
 
     requests = sorted(requests, key=lambda r: r.release)
     events: list[tuple[float, int, int, object]] = []
@@ -519,12 +558,349 @@ def run_event_loop(
     )
 
 
+def _wheel_width(group_times: Sequence[float]) -> float | None:
+    """Bucket width for the DONE/WAKE wheel: a few mean arrival-group gaps
+    (batch completions land roughly once per served burst of arrivals), or
+    ``None`` → pure-heapq mode when the trace gives no usable spread."""
+    if len(group_times) < 2:
+        return None
+    span = group_times[-1] - group_times[0]
+    if not (span > 0.0) or not math.isfinite(span):
+        return None
+    return 4.0 * span / (len(group_times) - 1)
+
+
+def _array_loop(
+    requests: Sequence[Request],
+    workers: list[Worker],
+    pool: _Pool,
+    pick: _PickFn,
+    *,
+    horizon: float | None,
+    charge_scheduler_overhead: bool,
+) -> SimResult:
+    """The array-backed engine behind ``run_event_loop(engine="array")``.
+
+    Identical observable behaviour to the scalar loop — same scheduler-hook
+    call sequence, same timestamps, same rng consumption, same result
+    fields — with the event plumbing swapped out:
+
+    - ARRIVALs never touch a priority queue: the
+      :class:`~repro.core.requeststore.RequestStore` presorts the trace
+      into numpy columns with same-timestamp group boundaries, so the
+      arrival source is a cursor over precomputed slices (the scalar loop
+      pays a heap push **and** pop per request);
+    - DONE/WAKE events live in the :class:`~repro.core.eventwheel.EventWheel`
+      calendar queue and are drained a bucket at a time; a three-way merge
+      (arrival cursor, in-hand bucket batch, wheel head) preserves the
+      scalar loop's global ``(time, seq)`` order, with arrivals numbered
+      ``0..n-1`` before any dynamic event so same-timestamp arrivals still
+      come first;
+    - per-request state writes go to the store's ``started``/``finished``
+      columns via one fancy-indexed write per *batch*, and the end-of-run
+      stats fold is one vectorized pass (the object attributes are still
+      written at event time — schedulers like Clipper read
+      ``req.started``/``req.finished`` inside ``on_batch_done``).
+
+    ``peak_heap_size`` reports peak *pending events*: undelivered arrivals
+    plus wheel occupancy (in-flight DONEs, live and superseded WAKEs) —
+    the satellite fix for the bucketed path, where "Python heap length"
+    no longer exists.
+    """
+    n = len(workers)
+    store = RequestStore(requests)
+    reqs = store.requests
+    gstarts = store.group_starts
+    gtimes = store.group_times
+    ng = len(gtimes)
+    n_req = len(reqs)
+    started_col = store.started
+    finished_col = store.finished
+
+    wheel = EventWheel(bucket_ms=_wheel_width(gtimes))
+    # Arrivals conceptually hold seqs 0..n-1 (assigned at store build, in
+    # release order); dynamic events keep counting — so at equal times
+    # arrivals sort first, exactly like the scalar heap's (time, seq) keys.
+    seq = itertools.count(n_req)
+
+    peak_pending = n_req
+    arr_left = n_req  # arrivals not yet delivered to a scheduler
+    worker_busy_time = 0.0
+    sched_time = 0.0  # wall-clock seconds inside scheduler hooks
+    n_decisions = 0
+    n_batches = 0
+    last_time = 0.0
+    inflight: list[tuple[float, float] | None] = [None] * n  # (start, end)
+    pending_wake: list[float | None] = [None] * n
+    pc = _time.perf_counter
+    delivers = [getattr(w.scheduler, "on_arrivals", None) for w in workers]
+    # Columnar delivery hooks (DESIGN.md §10): a scheduler exposing
+    # ``on_arrivals_cols(store, lo, hi, now)`` takes bulk arrivals as a
+    # store row range instead of an object slice; ``on_arrival_row`` is
+    # the idle-path single-row variant.  Schedulers without them get the
+    # exact object-delivery sequence the scalar loop produces.
+    delivers_cols = [
+        getattr(w.scheduler, "on_arrivals_cols", None) for w in workers
+    ]
+    row_delivers = [
+        getattr(w.scheduler, "on_arrival_row", None) for w in workers
+    ]
+    busy = pool.busy
+    # Schedulers that read ``req.started``/``req.finished`` inside their
+    # hooks (Clipper's AIMD, adaptive Clockwork) declare it via
+    # ``reads_request_state``; unknown schedulers default to True for
+    # safety.  When nobody in the pool reads mid-run state, the loop skips
+    # the two per-request attribute writes on the hot path and flushes the
+    # columns once at the end (``store.writeback()``) instead.
+    live_state = any(
+        getattr(w.scheduler, "reads_request_state", True) for w in workers
+    )
+
+    def try_dispatch(w: int, now: float) -> None:
+        nonlocal worker_busy_time, peak_pending, sched_time, n_decisions
+        if busy[w]:
+            return
+        worker = workers[w]
+        # simlint: ignore[R1] -- meters real scheduler overhead (reported, optionally charged as latency); the sim clock itself stays virtual
+        t0 = pc()
+        batch, wake = worker.scheduler.next_batch(now)
+        # simlint: ignore[R1] -- closes the overhead meter opened above
+        dt = pc() - t0
+        sched_time += dt
+        n_decisions += 1
+        overhead = dt * 1e3 if charge_scheduler_overhead else 0.0
+        if batch is not None:
+            start = now + overhead
+            dur = worker.executor(batch, start)
+            rows = batch.rows
+            if rows is None:
+                # simlint: ignore[R5] -- one row-index list per dispatched batch: the price of one fancy-indexed column write replacing per-request attribute churn
+                rows = store.rows_for(batch.requests)
+            if type(rows) is range and rows.step == 1:
+                # rows-annotated batch (``on_arrivals_cols`` schedulers):
+                # the column write is an O(1) slice assignment
+                started_col[rows.start:rows.stop] = start
+            else:
+                rows = np.asarray(rows, dtype=np.intp)
+                started_col[rows] = start
+            if pool.track_work:
+                if live_state:
+                    for r in batch.requests:
+                        r.started = start
+                        pool.discharge(w, r.rid)
+                else:
+                    for r in batch.requests:
+                        pool.discharge(w, r.rid)
+            elif live_state:
+                for r in batch.requests:
+                    r.started = start
+            busy[w] = True
+            worker_busy_time += dur
+            inflight[w] = (start, start + dur)
+            wheel.push(start + dur, next(seq), _DONE, (w, batch, rows))
+            pending = arr_left + len(wheel)
+            if pending > peak_pending:
+                peak_pending = pending
+        elif wake is not None and np.isfinite(wake) and wake > now:
+            if pending_wake[w] is None or wake < pending_wake[w]:
+                pending_wake[w] = wake
+                wheel.push(wake, next(seq), _WAKE, w)
+                pending = arr_left + len(wheel)
+                if pending > peak_pending:
+                    peak_pending = pending
+        # the decision may have timed requests out (drop phase) — keep the
+        # policy load signal honest
+        pool.sweep_dropped(w)
+
+    gi = 0  # next arrival group
+    buf: list = []  # in-hand wheel bucket (drained, partially consumed)
+    bi = 0
+    nbuf = 0
+    ev: tuple = ()
+    while True:
+        # --- three-way merge: arrival cursor vs in-hand bucket vs wheel ---
+        t_arr = gtimes[gi] if gi < ng else math.inf
+        if bi < nbuf:
+            ev = buf[bi]
+            ekey = (ev[0], ev[1])
+            take = _TAKE_BUF
+            if wheel:
+                wkey = wheel.peek_key()
+                if wkey < ekey:
+                    # an event pushed *during* the current bucket batch
+                    # landed before its remaining entries — take it singly
+                    ekey = wkey
+                    take = _TAKE_ONE
+        elif wheel:
+            ekey = wheel.peek_key()
+            take = _TAKE_BUCKET
+        else:
+            ekey = _NO_EVENT
+            take = 0
+        if t_arr <= ekey[0]:
+            if t_arr == math.inf:
+                break  # arrivals, bucket batch and wheel all exhausted
+            now = t_arr
+            if horizon is not None and now > horizon:
+                last_time = horizon
+                for span in inflight:
+                    if span is not None and span[1] > horizon:
+                        worker_busy_time -= span[1] - max(span[0], horizon)
+                break
+            last_time = now
+            a, b = gstarts[gi], gstarts[gi + 1]
+            gi += 1
+            arr_left -= b - a
+            if n == 1:
+                # Single-worker fast path (the benchmark regime): no picks,
+                # no charges.  While the worker is idle its share of the
+                # burst is delivered one request at a time with a dispatch
+                # attempt in between (scalar semantics: an urgent
+                # head-of-burst request can grab the idle worker); the
+                # moment it goes busy the rest of the group is ONE slice
+                # handed to bulk ``on_arrivals`` — no per-request Python at
+                # all, which is where the array engine's throughput lives.
+                sched0 = workers[0].scheduler
+                dr0 = row_delivers[0]
+                i = a
+                while i < b and not busy[0]:
+                    t0 = pc()  # simlint: ignore[R1] -- overhead meter, not sim time
+                    if dr0 is not None:
+                        dr0(store, i, now)
+                    else:
+                        sched0.on_arrival(reqs[i], now)
+                    sched_time += pc() - t0  # simlint: ignore[R1] -- overhead meter, not sim time
+                    i += 1
+                    try_dispatch(0, now)
+                if i < b:
+                    dc0 = delivers_cols[0]
+                    deliver = delivers[0]
+                    t0 = pc()  # simlint: ignore[R1] -- overhead meter, not sim time
+                    if dc0 is not None:
+                        # columnar bulk delivery: a row range, no slice
+                        dc0(store, i, b, now)
+                    elif deliver is not None:
+                        # simlint: ignore[R5] -- one slice per (burst, busy) window, replacing per-request heap pops and scheduler calls
+                        deliver(reqs[i:b], now)
+                    else:
+                        for req in reqs[i:b]:
+                            sched0.on_arrival(req, now)
+                    sched_time += pc() - t0  # simlint: ignore[R1] -- overhead meter, not sim time
+            else:
+                # Multi-worker: route/deliver in arrival order, exactly as
+                # the scalar loop does (same pick → same rng draws, same
+                # charge/busy side-effect ordering, same bulk flush per
+                # busy worker).
+                # simlint: ignore[R5] -- one routing buffer per burst, replacing per-request scheduler calls with one bulk delivery per worker
+                buffered: dict[int, list[Request]] = {}
+                for i in range(a, b):
+                    req = reqs[i]
+                    w = pick(req, now, pool)
+                    pool.charge(w, req)
+                    if busy[w]:
+                        # simlint: ignore[R5] -- group list created once per (burst, worker), not per request
+                        buffered.setdefault(w, []).append(req)
+                        pool.pending_offset[w] += 1
+                    else:
+                        t0 = pc()  # simlint: ignore[R1] -- overhead meter, not sim time
+                        workers[w].scheduler.on_arrival(req, now)
+                        sched_time += pc() - t0  # simlint: ignore[R1] -- overhead meter, not sim time
+                        try_dispatch(w, now)
+                for w, group in buffered.items():
+                    pool.pending_offset[w] = 0
+                    deliver = delivers[w]
+                    t0 = pc()  # simlint: ignore[R1] -- overhead meter, not sim time
+                    if deliver is not None:
+                        deliver(group, now)
+                    else:
+                        sched = workers[w].scheduler
+                        for req in group:
+                            sched.on_arrival(req, now)
+                    sched_time += pc() - t0  # simlint: ignore[R1] -- overhead meter, not sim time
+            continue
+        # --- dynamic event (DONE/WAKE) ---
+        if take == _TAKE_BUF:
+            now, _s, kind, payload = ev
+            bi += 1
+        elif take == _TAKE_BUCKET:
+            # refill the in-hand batch with the next wheel bucket — the
+            # batched DONE/WAKE path: one calendar-bucket drain amortizes
+            # the queue maintenance over every event in the bucket
+            buf = wheel.pop_bucket()
+            bi = 1
+            nbuf = len(buf)
+            now, _s, kind, payload = buf[0]
+        else:  # _TAKE_ONE
+            now, _s, kind, payload = wheel.pop()
+        if horizon is not None and now > horizon:
+            last_time = horizon
+            for span in inflight:
+                if span is not None and span[1] > horizon:
+                    worker_busy_time -= span[1] - max(span[0], horizon)
+            break
+        last_time = now
+        if kind == _DONE:
+            w, batch, rows = payload
+            busy[w] = False
+            inflight[w] = None
+            n_batches += 1
+            if type(rows) is range:
+                finished_col[rows.start:rows.stop] = now
+                alone = store.true_time[rows.start:rows.stop].tolist()
+            else:
+                finished_col[rows] = now
+                # simlint: ignore[R5] -- one alone-times list per completed batch (feedback path), not per request
+                alone = store.true_time[rows].tolist()
+            if live_state:
+                for r in batch.requests:
+                    r.finished = now
+            t0 = pc()  # simlint: ignore[R1] -- overhead meter, not sim time
+            workers[w].scheduler.on_batch_done(batch, now, alone)
+            sched_time += pc() - t0  # simlint: ignore[R1] -- overhead meter, not sim time
+            try_dispatch(w, now)
+        else:  # _WAKE
+            w = payload
+            if pending_wake[w] is not None and now >= pending_wake[w]:
+                pending_wake[w] = None
+            try_dispatch(w, now)
+
+    if not live_state:
+        # Mid-run object writes were skipped — flush the state columns
+        # onto the Request objects so callers see the scalar loop's exact
+        # post-run per-object state.
+        store.writeback()
+    # Drop-free fast path: every ``req.dropped = ...`` write in the repo's
+    # schedulers is paired with an ``n_timed_out`` increment, so a pool
+    # whose schedulers all expose the counter at zero provably dropped
+    # nothing and the O(n) per-object dropped scan can be skipped.
+    no_drops = all(
+        getattr(w_.scheduler, "n_timed_out", None) == 0 for w_ in workers
+    )
+    ok, late, dropped, unserved, lat = store.fold_stats(no_drops=no_drops)
+    return SimResult(
+        n_total=n_req,
+        n_finished_ok=ok,
+        n_finished_late=late,
+        n_dropped=dropped,
+        n_unserved=unserved,
+        worker_busy=worker_busy_time,
+        makespan_ms=last_time,
+        latencies=lat,
+        n_workers=n,
+        peak_heap_size=peak_pending,
+        sched_time_ms=sched_time * 1e3,
+        n_decisions=n_decisions,
+        n_batches=n_batches,
+    )
+
+
 def simulate(
     requests: Sequence[Request],
     scheduler: SchedulerLike,
     executor: Executor,
     horizon: float | None = None,
     charge_scheduler_overhead: bool = False,
+    engine: str = "scalar",
 ) -> SimResult:
     """The single-worker evaluation harness (§5) — the 1-worker case of
     :func:`run_event_loop`, kept as the stable entry point."""
@@ -534,4 +910,5 @@ def simulate(
         policy="round_robin",
         horizon=horizon,
         charge_scheduler_overhead=charge_scheduler_overhead,
+        engine=engine,
     )

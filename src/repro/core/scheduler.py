@@ -103,8 +103,21 @@ class SchedulerConfig:
 
 @dataclasses.dataclass
 class Batch:
+    """A scheduling decision: the requests to execute at ``batch_size``.
+
+    ``rows`` is an optional columnar annotation for the array engine
+    (DESIGN.md §10): the requests' row indices in the run's
+    :class:`~repro.core.requeststore.RequestStore`, in batch order.  A
+    scheduler fed through ``on_arrivals_cols`` already knows its rows and
+    a contiguous ``range`` here turns the engine's per-batch column
+    writes into O(1) numpy slice assignments; ``None`` (every existing
+    scheduler) means the engine resolves rows itself via
+    ``RequestStore.rows_for``.  The scalar loop ignores the field.
+    """
+
     requests: list[Request]
     batch_size: int
+    rows: "range | list[int] | None" = None
 
     def __len__(self) -> int:
         return len(self.requests)
@@ -126,6 +139,10 @@ class OrlojScheduler:
     """Distribution-aware, batch-aware priority scheduler (Algorithm 1)."""
 
     name = "orloj"
+    # Never reads ``req.started``/``req.finished`` inside its hooks
+    # (feedback comes through ``on_batch_done``'s alone-times argument), so
+    # the array event loop may defer per-request state writes to the end.
+    reads_request_state = False
 
     def __init__(
         self,
@@ -248,6 +265,15 @@ class OrlojScheduler:
             for rid, m in zip(rids, miles.tolist()):
                 if math.isfinite(m):
                     heapq.heappush(self._milestones, (m, rid, bs))
+
+    def on_arrivals_cols(self, store, lo: int, hi: int, now: float) -> None:
+        """Columnar bulk arrival: rows ``[lo, hi)`` of the array engine's
+        :class:`~repro.core.requeststore.RequestStore` (store order ==
+        release order).  Delegates to :meth:`on_arrivals` over the store's
+        request slice — same objects, same scoring pass, bit-identical
+        behaviour — so the array loop can hand the scheduler a row range
+        without materializing an intermediate list per burst."""
+        self.on_arrivals(store.requests[lo:hi], now)
 
     def on_batch_done(
         self, batch: Batch, now: float, alone_times_ms: Sequence[float]

@@ -88,11 +88,16 @@ def tiny() -> list[ExperimentSpec]:
 
 
 def _scaleout_cells() -> list[ExperimentSpec]:
-    """Pool cells feeding the scale-out dispatch claim: a 4-replica
-    heterogeneous pool (half the replicas 2x slower) under each compared
-    front-end policy.  Offered load is 0.8 x the pool's effective capacity
-    (2 fast + 2 half-speed replicas = 3 fast-worker equivalents)."""
-    return [
+    """Pool cells feeding the scale-out dispatch claims: a 4-replica pool
+    under each compared front-end policy, heterogeneous (half the replicas
+    2x slower; offered load 0.8 x the 3 fast-worker-equivalent capacity)
+    AND homogeneous (offered load 0.8 x 4 capacities).  ``round_robin``
+    and ``jsq_work`` are the original PR-5 cells (their specs are
+    unchanged — the bitwise grid contract covers them); ``p2c`` rides the
+    same traces and feeds the p2c-dispatch claim, and the homogeneous
+    pool feeds homog-pool-parity (DESIGN.md §7 carry-over, now asserted
+    since fleet mode exercises both at scale)."""
+    hetero_cells = [
         ExperimentSpec(
             workload="bimodal",
             workload_params={"std": 1.0},
@@ -106,9 +111,26 @@ def _scaleout_cells() -> list[ExperimentSpec]:
             hetero=True,
             tag=f"eval/pool-hetero/{policy}/s{seed}",
         )
-        for policy in ("round_robin", "jsq_work")
+        for policy in ("round_robin", "jsq_work", "p2c")
         for seed in (7, 11, 23)
     ]
+    homog_cells = [
+        ExperimentSpec(
+            workload="bimodal",
+            workload_params={"std": 1.0},
+            slo_scale=3.0,
+            utilization=0.8 * 4,
+            n_requests=500,
+            seed=seed,
+            system="orloj",
+            n_workers=4,
+            policy=policy,
+            tag=f"eval/pool-homog/{policy}/s{seed}",
+        )
+        for policy in ("round_robin", "jsq_work", "p2c")
+        for seed in (7, 11, 23)
+    ]
+    return hetero_cells + homog_cells
 
 
 def small() -> list[ExperimentSpec]:
@@ -170,11 +192,98 @@ def engine_smoke() -> list[ExperimentSpec]:
     ]
 
 
+# --------------------------------------------------------------------------
+# Fleet-scale cluster grids (DESIGN.md §10): 10^5-request traces over
+# 10^2–10^3 workers, dispatched hierarchically (front-end p2c/jsq_work
+# between pools, a flat policy within each) on the array engine.
+
+
+def _fleet_cell(
+    n_workers: int,
+    n_pools: int,
+    inter: str,
+    *,
+    budget_s: float,
+    n_requests: int = 100_000,
+    engine: str = "array",
+    seed: int = 13,
+) -> ExperimentSpec:
+    return ExperimentSpec(
+        workload="bimodal",
+        workload_params={"std": 1.0},
+        slo_scale=3.0,
+        utilization=0.8 * n_workers,
+        n_requests=n_requests,
+        seed=seed,
+        system="orloj",
+        n_workers=n_workers,
+        policy=inter,
+        n_pools=n_pools,
+        intra_policy="round_robin",
+        engine=engine,
+        tick_ms=4.0,
+        wall_budget_s=budget_s,
+        loop_seed=0,
+        tag=f"cluster/fleet-w{n_workers}p{n_pools}/{inter}/{engine}",
+    )
+
+
+def _fleet_equiv_cells(inters: Sequence[str] = ("p2c", "jsq_work")) -> list[ExperimentSpec]:
+    """Scalar/array paired fleet cells at small scale: identical specs up
+    to ``engine``, feeding the array-scalar-equivalence claim (the fleet
+    grids' correctness contract — finish counts must match exactly)."""
+    return [
+        ExperimentSpec(
+            workload="bimodal",
+            workload_params={"std": 1.0},
+            slo_scale=3.0,
+            utilization=0.8 * 16,
+            n_requests=2_000,
+            seed=13,
+            system="orloj",
+            n_workers=16,
+            policy=inter,
+            n_pools=4,
+            intra_policy="round_robin",
+            engine=engine,
+            tick_ms=4.0,
+            loop_seed=0,
+            tag=f"cluster/equiv-w16p4/{inter}/{engine}",
+        )
+        for inter in inters
+        for engine in ("scalar", "array")
+    ]
+
+
+def cluster_fleet() -> list[ExperimentSpec]:
+    """The fleet grid: 10^5-request hierarchical-dispatch cells at 100 and
+    1000 workers (array engine, tick-quantized arrivals), wall-budgeted,
+    plus the scalar/array equivalence pairs at small scale.  Gated on
+    budget + equivalence (claims ``cluster-wall-budget`` and
+    ``array-scalar-equivalence``); finish rates are tracked evidence."""
+    return [
+        _fleet_cell(100, 10, "p2c", budget_s=300.0),
+        _fleet_cell(100, 10, "jsq_work", budget_s=300.0),
+        _fleet_cell(1000, 32, "p2c", budget_s=600.0),
+    ] + _fleet_equiv_cells()
+
+
+def cluster_smoke() -> list[ExperimentSpec]:
+    """Trimmed CI tier of :func:`cluster_fleet`: one 10^5-request
+    100-worker cell under its wall budget plus one scalar/array
+    equivalence pair (~2 min locally)."""
+    return [_fleet_cell(100, 10, "p2c", budget_s=300.0)] + _fleet_equiv_cells(
+        inters=("p2c",)
+    )
+
+
 GRIDS = {
     "tiny": tiny,
     "small": small,
     "full": full,
     "engine-smoke": engine_smoke,
+    "cluster": cluster_fleet,
+    "cluster-smoke": cluster_smoke,
 }
 
 

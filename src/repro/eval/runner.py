@@ -169,14 +169,29 @@ def run_spec(spec: ExperimentSpec) -> ExperimentResult:
             n_requests=spec.n_requests,
             utilization=spec.utilization,
             seed=spec.seed,
+            tick_ms=spec.tick_ms,
         ),
     )
+    policy: str | Callable = spec.policy
+    if spec.n_pools > 1:
+        # Fleet mode: the spec's policy routes BETWEEN pools, intra_policy
+        # places within the winning pool (serving.cluster).
+        from ..serving.cluster import hierarchical_policy
+
+        policy = hierarchical_policy(
+            spec.n_workers,
+            spec.n_pools,
+            inter=spec.policy,
+            intra=spec.intra_policy,
+            seed=spec.seed if spec.loop_seed is None else spec.loop_seed,
+        )
     res = run_event_loop(
         rs.fresh(),
         _build_pool(spec, lm, rs, lambda i, wlm, slow: ModelExecutor(wlm, seed=i)),
-        policy=spec.policy,
+        policy=policy,
         charge_scheduler_overhead=spec.charge_overhead,
         seed=spec.seed if spec.loop_seed is None else spec.loop_seed,
+        engine=spec.engine,
     )
     # simlint: ignore[R1] -- wall_time_s metadata column; the replay itself is virtual-time
     return _fold_result(spec, rs, res, time.perf_counter() - t_wall)

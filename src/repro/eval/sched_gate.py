@@ -16,9 +16,17 @@ band; tighten it once runner variance is characterized).
 
 Checked per pending-count size: ``vectorized_arrivals_per_s`` must not
 fall below ``baseline / max_ratio`` and ``next_batch_us`` must not exceed
-``baseline * max_ratio``.  Speedup-vs-scalar ratios are *not* gated (both
-paths slow down together on a loaded runner, so the ratio is stable but
-uninformative about regressions).
+``baseline * max_ratio``.  Speedup-vs-scalar ratios are *not* gated for
+the scheduler sections (both paths slow down together on a loaded runner,
+so the ratio is stable but uninformative about regressions).
+
+The ``eventloop`` section (array engine vs the scalar oracle loop,
+``benchmarks/queue_micro.py::eventloop_throughput``) is gated the other
+way round: its *speedup* IS the claim — both engines replay the identical
+trace in the same process, so their ratio is immune to runner load — and
+must stay >= :data:`MIN_EVENTLOOP_SPEEDUP` at every size (the ISSUE-level
+"≥5× end-to-end at 10⁴+ requests" floor).  ``array_events_per_s`` also
+gets the loose absolute ratio band against the committed baseline.
 """
 
 from __future__ import annotations
@@ -28,9 +36,13 @@ import json
 import sys
 from typing import Mapping
 
-__all__ = ["check", "main"]
+__all__ = ["check", "main", "MIN_EVENTLOOP_SPEEDUP"]
 
 DEFAULT_MAX_RATIO = 3.0
+# Absolute floor on the array engine's measured end-to-end speedup over
+# the scalar loop.  Measured ~5.9x at 1e4 and ~6.2x at 1e5 requests on
+# the benchmark's tick-quantized trace; 5.0 is the acceptance floor.
+MIN_EVENTLOOP_SPEEDUP = 5.0
 
 
 def check(
@@ -61,6 +73,41 @@ def check(
             fails.append(
                 f"n={size}: next_batch latency {f_us:.0f}us is more than "
                 f"{max_ratio:g}x above the baseline {b_us:.0f}us"
+            )
+    fails.extend(_check_eventloop(baseline, fresh, max_ratio))
+    return fails
+
+
+def _check_eventloop(
+    baseline: Mapping, fresh: Mapping, max_ratio: float
+) -> list[str]:
+    """Gate the ``eventloop`` section: the array/scalar speedup must hold
+    the absolute :data:`MIN_EVENTLOOP_SPEEDUP` floor at every size, and
+    ``array_events_per_s`` must stay within the ratio band of the
+    committed baseline.  A baseline without the section (pre-array-engine
+    artifacts) skips the gate entirely."""
+    base_el = baseline.get("eventloop") or {}
+    base_sizes = base_el.get("sizes") or {}
+    if not base_sizes:
+        return []
+    fresh_sizes = (fresh.get("eventloop") or {}).get("sizes") or {}
+    fails: list[str] = []
+    for size, base in sorted(base_sizes.items(), key=lambda kv: int(kv[0])):
+        cur = fresh_sizes.get(size)
+        if cur is None:
+            fails.append(f"eventloop n={size}: missing from the fresh artifact")
+            continue
+        speedup = cur["speedup"]
+        if speedup < MIN_EVENTLOOP_SPEEDUP:
+            fails.append(
+                f"eventloop n={size}: array/scalar speedup {speedup:.2f}x "
+                f"is below the {MIN_EVENTLOOP_SPEEDUP:g}x floor"
+            )
+        b, f = base["array_events_per_s"], cur["array_events_per_s"]
+        if f * max_ratio < b:
+            fails.append(
+                f"eventloop n={size}: array throughput {f:.0f} events/s is "
+                f"more than {max_ratio:g}x below the baseline {b:.0f}/s"
             )
     return fails
 

@@ -67,6 +67,22 @@ class ExperimentSpec:
     n_workers: int = 1
     policy: str = "round_robin"  # front-end dispatch for n_workers > 1
     hetero: bool = False  # half the pool runs a 2x-slower latency model
+    # Event-loop implementation (repro.core.eventloop.ENGINES): "scalar"
+    # is the oracle heapq loop, "array" the RequestStore/EventWheel engine
+    # (bit-identical observable behaviour, built for 10^5+ requests).
+    engine: str = "scalar"
+    # Fleet mode: n_pools > 1 partitions the pool into contiguous pools
+    # and dispatches hierarchically — ``policy`` becomes the inter-pool
+    # (front-end) policy, ``intra_policy`` places within the winning pool
+    # (serving.cluster.hierarchical_policy).
+    n_pools: int = 1
+    intra_policy: str = "round_robin"
+    # Arrival quantization tick (TraceConfig.tick_ms); 0 = raw timestamps.
+    tick_ms: float = 0.0
+    # Wall-clock budget (s) for this cell; 0 = unbudgeted.  Budgeted cells
+    # feed the cluster-wall-budget claim: the replay (wall_s) must finish
+    # inside the budget, which is what gates the fleet-scale grids.
+    wall_budget_s: float = 0.0
     sched_cfg: dict = dataclasses.field(default_factory=dict)  # orloj only
     lm_c0: float = 25.0  # Eq.-3 batch latency model of the serving hardware
     lm_c1: float = 1.0

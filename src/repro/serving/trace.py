@@ -37,6 +37,13 @@ class TraceConfig:
     burstiness: float = 0.35  # CV of the per-bucket rate process
     bucket_ms: float = 2_000.0  # rate-modulation bucket
     seed: int = 0
+    # Arrival-timestamp quantization (a front-end draining its network
+    # queue every tick delivers same-instant bursts): arrivals snap to
+    # ``floor(t / tick_ms) * tick_ms``.  0 (default) keeps the raw Poisson
+    # timestamps — existing grids are bit-identical.  Quantized traces are
+    # what the array engine's coalesced bulk paths feed on; the fleet-scale
+    # ``cluster`` grids use it.
+    tick_ms: float = 0.0
 
 
 def azure_like_arrivals(
@@ -188,6 +195,8 @@ def generate_requests(
         sizes, latency_model, cfg.utilization, cfg.reference_batch, rng
     )
     arrivals = azure_like_arrivals(rate, cfg.n_requests, cfg, rng)
+    if cfg.tick_ms > 0.0:
+        arrivals = np.floor(arrivals / cfg.tick_ms) * cfg.tick_ms
 
     reqs = [
         Request(

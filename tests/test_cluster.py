@@ -69,3 +69,77 @@ def test_cluster_supports_horizon():
     scheds = [OrlojScheduler(LM, initial_dists=rs.initial_dists()) for _ in range(2)]
     res = simulate_cluster(rs.fresh(), scheds, ModelExecutor(LM), horizon=1.0)
     assert res.n_unserved > 0
+
+
+# ---------------------------------------------------- fleet mode (§10)
+from repro.core import Worker  # noqa: E402
+from repro.serving.cluster import (  # noqa: E402
+    INTER_POOL_POLICIES,
+    hierarchical_policy,
+    pool_bounds,
+    run_fleet,
+)
+
+
+def _orloj(rs):
+    return OrlojScheduler(LM, initial_dists=rs.initial_dists())
+
+
+def test_pool_bounds_even_partition():
+    assert pool_bounds(10, 2) == [(0, 5), (5, 10)]
+    assert pool_bounds(7, 3) == [(0, 3), (3, 5), (5, 7)]  # first pools +1
+    assert pool_bounds(4, 4) == [(0, 1), (1, 2), (2, 3), (3, 4)]
+    assert pool_bounds(5, 1) == [(0, 5)]
+    for bad in ((4, 0), (4, 5), (0, 1)):
+        with pytest.raises(ValueError, match="n_pools"):
+            pool_bounds(*bad)
+
+
+def test_hierarchical_policy_validation():
+    with pytest.raises(ValueError, match="unknown inter-pool policy"):
+        hierarchical_policy(8, 2, inter="least_loaded")  # intra-only name
+    with pytest.raises(ValueError, match="unknown intra-pool policy"):
+        hierarchical_policy(8, 2, intra="nope")
+
+
+@pytest.mark.parametrize("inter", INTER_POOL_POLICIES)
+@pytest.mark.parametrize("intra", sorted(DISPATCH_POLICIES))
+def test_fleet_conservation_every_policy_pair(inter, intra):
+    """Every inter x intra combination resolves all requests and routes
+    only within pool bounds (conservation through two dispatch levels)."""
+    rs = _rs(util=0.9 * 4, n=200)
+    workers = [
+        Worker(_orloj(rs), ModelExecutor(LM, seed=i)) for i in range(4)
+    ]
+    res = run_fleet(
+        rs.fresh(), workers, n_pools=2, inter=inter, intra=intra, seed=3
+    )
+    assert res.n_total == 200
+    assert (
+        res.n_finished_ok + res.n_finished_late + res.n_dropped
+        + res.n_unserved == 200
+    )
+    assert res.n_unserved == 0
+
+
+def test_fleet_deterministic_and_engine_equivalent():
+    """Same seed -> identical fleet run; scalar and array engines agree
+    bit-for-bit through hierarchical dispatch (the policy owns its rng,
+    so dispatch sequences are engine-independent)."""
+    rs = _rs(util=0.9 * 6, n=300)
+
+    def run(engine):
+        workers = [
+            Worker(_orloj(rs), ModelExecutor(LM, seed=i)) for i in range(6)
+        ]
+        return run_fleet(
+            rs.fresh(), workers, n_pools=3, inter="p2c", intra="round_robin",
+            seed=5, engine=engine,
+        )
+
+    a, a2, b = run("scalar"), run("scalar"), run("array")
+    for f in ("n_finished_ok", "n_finished_late", "n_dropped", "n_unserved",
+              "makespan_ms", "n_decisions", "n_batches"):
+        assert getattr(a, f) == getattr(a2, f), f
+        assert getattr(a, f) == getattr(b, f), f
+    assert a.latencies.tobytes() == b.latencies.tobytes()

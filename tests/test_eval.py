@@ -426,3 +426,151 @@ def test_cli_tiny_grid_writes_artifact(tmp_path, monkeypatch):
     assert doc["grid"] == "tiny"
     assert len(results) == len(tiny())
     assert "claims" in doc
+
+
+# -- fleet grids and their claims (DESIGN.md §10) ------------------------------
+
+from dataclasses import replace as _replace  # noqa: E402
+
+from repro.eval.claims import (  # noqa: E402
+    claim_array_scalar_equivalence,
+    claim_cluster_wall_budget,
+    claim_homog_pool_parity,
+    claim_p2c_dispatch,
+)
+from repro.eval.grid import cluster_fleet, cluster_smoke  # noqa: E402
+from repro.eval.spec import TIMING_FIELDS  # noqa: E402
+
+
+def _cell(finish_rate: float = 1.0, *, wall_s: float = 0.0, **spec_kw):
+    """An ExperimentResult with an arbitrary spec — fleet-claim fixtures."""
+    spec_kw.setdefault("workload", "bimodal")
+    spec_kw.setdefault("slo_scale", 3.0)
+    spec_kw.setdefault("n_requests", 100)
+    spec = ExperimentSpec(**spec_kw)
+    n_ok = int(spec.n_requests * finish_rate)
+    return ExperimentResult(
+        spec=spec,
+        finish_rate=finish_rate,
+        n_total=spec.n_requests,
+        n_finished_ok=n_ok,
+        n_finished_late=0,
+        n_dropped=0,
+        n_unserved=spec.n_requests - n_ok,
+        utilization=0.5,
+        makespan_ms=1.0,
+        p99_alone_ms=1.0,
+        latency_p50_ms=1.0,
+        latency_p99_ms=1.0,
+        n_decisions=1,
+        sched_time_ms=0.0,
+        sched_us_per_request=0.0,
+        wall_s=wall_s,
+    )
+
+
+def test_cluster_grids_are_well_formed():
+    for name in ("cluster", "cluster-smoke"):
+        assert name in GRIDS
+    fleet, smoke = cluster_fleet(), cluster_smoke()
+    assert {s.tag for s in smoke} <= {s.tag for s in fleet}
+    big = [s for s in fleet if s.n_requests == 100_000]
+    assert big and all(s.wall_budget_s > 0 and s.engine == "array" for s in big)
+    assert {s.n_workers for s in big} == {100, 1000}
+    # every equivalence pair really is paired: same spec up to engine
+    pairs = [s for s in fleet if s.n_requests < 100_000]
+    keys = {
+        json.dumps({**s.to_dict(), "engine": None, "tag": ""}, sort_keys=True)
+        for s in pairs
+    }
+    assert len(pairs) == 2 * len(keys)
+    assert {s.engine for s in pairs} == {"scalar", "array"}
+
+
+def test_p2c_claim_and_homog_parity():
+    def pool_cells(policy, rate_hetero, rate_homog):
+        return [
+            _cell(rate_hetero, n_workers=4, policy=policy, hetero=True),
+            _cell(rate_homog, n_workers=4, policy=policy, utilization=0.9),
+        ]
+
+    results = (
+        pool_cells("round_robin", 0.90, 0.98)
+        + pool_cells("p2c", 0.93, 0.98)
+        + pool_cells("jsq_work", 0.95, 0.98)
+    )
+    assert claim_p2c_dispatch(results).passed
+    assert claim_homog_pool_parity(results).passed
+    # p2c trailing rr beyond the slack flips the ordering claim
+    bad = pool_cells("round_robin", 0.95, 0.98) + pool_cells("p2c", 0.90, 0.98)
+    assert not claim_p2c_dispatch(bad).passed
+    # a policy falling out of the homog band is a broken dispatcher
+    spread = pool_cells("p2c", 0.93, 0.98) + pool_cells("jsq_work", 0.95, 0.90)
+    assert not claim_homog_pool_parity(spread).passed
+    # hetero pools are exempt from the parity band (jsq SHOULD win there)
+    assert claim_homog_pool_parity(
+        [_cell(0.95, n_workers=4, policy="jsq_work", hetero=True),
+         _cell(0.80, n_workers=4, policy="round_robin", hetero=True)]
+    ).cells == ("no homogeneous pool cells with >= 2 policies",)
+
+
+def test_wall_budget_claim():
+    ok = _cell(1.0, wall_s=80.0, wall_budget_s=300.0, engine="array")
+    over = _cell(1.0, wall_s=301.0, wall_budget_s=300.0, engine="array")
+    c = claim_cluster_wall_budget([ok])
+    assert c.passed and c.margin == pytest.approx((300 - 80) / 300)
+    assert not claim_cluster_wall_budget([ok, over]).passed
+    assert not claim_cluster_wall_budget([_cell(1.0)]).passed  # empty domain
+
+
+def test_array_scalar_equivalence_claim():
+    a = _cell(1.0, engine="scalar", seed=3)
+    b = _cell(1.0, engine="array", seed=3)
+    c = claim_array_scalar_equivalence([a, b])
+    assert c.passed and c.margin == 0.0
+    # any outcome divergence fails, and the margin scales with the gap
+    b_bad = _replace(b, n_finished_ok=95, n_unserved=5, finish_rate=0.95)
+    c2 = claim_array_scalar_equivalence([a, b_bad])
+    assert not c2.passed and c2.margin == pytest.approx(-0.10)
+    # unpaired cells are not an equivalence statement
+    assert not claim_array_scalar_equivalence([a]).passed
+
+
+def test_evaluate_claims_scopes_to_the_grid():
+    """A fleet-only result set is gated on budget + equivalence, never on
+    the paper claims it has no cells for — and vice versa."""
+    fleet = [
+        _cell(1.0, wall_s=10.0, wall_budget_s=300.0, engine="array",
+              n_workers=100, n_pools=10, policy="p2c", n_requests=1000),
+        _cell(1.0, engine="scalar", n_workers=16, n_pools=4, policy="p2c",
+              seed=13),
+        _cell(1.0, engine="array", n_workers=16, n_pools=4, policy="p2c",
+              seed=13),
+    ]
+    names = {c.name for c in evaluate_claims(fleet)}
+    assert names == {"cluster-wall-budget", "array-scalar-equivalence"}
+
+    paper = [
+        _fake("orloj", 0.9, slo=1.5),
+        _fake("nexus", 0.8, slo=1.5),
+        _fake("orloj", 0.95, slo=3.0),
+        _fake("nexus", 0.85, slo=3.0),
+    ]
+    names = {c.name for c in evaluate_claims(paper)}
+    assert names == {"tight-slo-dominance", "static-parity", "slo-monotonicity"}
+
+
+@pytest.mark.slow
+def test_small_grid_array_engine_bitwise_equivalent():
+    """The ISSUE-level correctness contract: every small-grid cell replayed
+    on the array engine reproduces the scalar loop's outcome fields
+    exactly (timing fields excluded by definition)."""
+    specs = small()
+    scalar = run_specs(specs, jobs=0)
+    arrayr = run_specs([_replace(s, engine="array") for s in specs], jobs=0)
+    for a, b in zip(scalar, arrayr):
+        da, db = a.stable_dict(), b.stable_dict()
+        da["spec"].pop("engine"), db["spec"].pop("engine")
+        for f in TIMING_FIELDS:
+            da.pop(f, None), db.pop(f, None)
+        assert da == db, a.spec.tag or a.spec

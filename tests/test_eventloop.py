@@ -202,3 +202,115 @@ def test_callable_policy():
     )
     assert res.n_unserved == 0
     assert res.n_workers == 2
+
+
+# ------------------------------------------------- array-engine contract
+# The array engine (RequestStore + EventWheel, DESIGN.md §10) must be
+# observably identical to the scalar oracle loop: same counts, same
+# bit-level latencies, same per-object bookkeeping.  peak_heap_size is
+# the one engine-specific field (both report peak pending events, but
+# the scalar heap counts superseded-wake tombstones slightly
+# differently), so it is bound-checked, not equality-checked.
+
+_STABLE_FIELDS = (
+    "n_total", "n_finished_ok", "n_finished_late", "n_dropped",
+    "n_unserved", "worker_busy", "makespan_ms", "n_workers",
+    "n_decisions", "n_batches",
+)
+
+
+def _run_both(rs, n_workers=1, policy="round_robin", **kw):
+    out = {}
+    for engine in ("scalar", "array"):
+        reqs = rs.fresh()
+        workers = [
+            Worker(_orloj(rs), ModelExecutor(LM, seed=i))
+            for i in range(n_workers)
+        ]
+        out[engine] = (
+            run_event_loop(reqs, workers, policy=policy, engine=engine, **kw),
+            reqs,
+        )
+    return out
+
+
+@pytest.mark.parametrize("n_workers,policy", [(1, "round_robin"), (3, "p2c")])
+def test_array_engine_bitwise_equivalent(n_workers, policy):
+    rs = _rs(util=0.9 * n_workers)
+    both = _run_both(rs, n_workers=n_workers, policy=policy)
+    a, a_reqs = both["scalar"]
+    b, b_reqs = both["array"]
+    for f in _STABLE_FIELDS:
+        assert getattr(a, f) == getattr(b, f), f
+    assert a.latencies.tobytes() == b.latencies.tobytes()
+    # identical per-object bookkeeping (the writeback contract)
+    sa = sorted(a_reqs, key=lambda r: r.rid)
+    sb = sorted(b_reqs, key=lambda r: r.rid)
+    assert [(r.started, r.finished, r.dropped) for r in sa] == [
+        (r.started, r.finished, r.dropped) for r in sb
+    ]
+    assert b.peak_heap_size <= a.peak_heap_size
+
+
+def test_array_engine_with_quantized_trace():
+    """Tick-quantized arrivals (the fleet grids' shape) exercise the
+    coalesced same-timestamp bulk paths on both engines."""
+    rs = generate_requests(
+        bimodal(1.0), LM, slo_scale=3.0,
+        cfg=TraceConfig(n_requests=400, seed=7, utilization=0.9, tick_ms=4.0),
+    )
+    both = _run_both(rs)
+    a, _ = both["scalar"]
+    b, _ = both["array"]
+    for f in _STABLE_FIELDS:
+        assert getattr(a, f) == getattr(b, f), f
+    assert a.latencies.tobytes() == b.latencies.tobytes()
+
+
+def test_array_engine_horizon_and_simulate_entry():
+    rs = _rs(util=1.0, n=300)
+    res = simulate(
+        rs.fresh(), _orloj(rs), ModelExecutor(LM), horizon=1.0, engine="array"
+    )
+    assert res.makespan_ms == 1.0
+    assert res.n_unserved > 0
+
+
+def test_unknown_engine_rejected():
+    rs = _rs(util=0.5, n=10)
+    with pytest.raises(ValueError, match="unknown engine"):
+        run_event_loop(
+            rs.fresh(), [Worker(_orloj(rs), ModelExecutor(LM))], engine="simd"
+        )
+
+
+def test_batch_rows_columnar_scheduler_path():
+    """A scheduler speaking the columnar protocol (on_arrival_row /
+    on_arrivals_cols, Batch.rows ranges) matches an object-path scheduler
+    making the same FIFO decisions — the engine's slice fast paths write
+    the same columns the fancy-index fallback does."""
+    from benchmarks.queue_micro import (
+        _ConstExecutor,
+        _eventloop_requests,
+        _FifoColsScheduler,
+        _FifoObjScheduler,
+    )
+
+    master = _eventloop_requests(2_000, tick_ms=4.0, rate_per_ms=64.0)
+
+    def clone():
+        return [
+            type(r)(app_id=r.app_id, release=r.release, slo=r.slo,
+                    true_time=r.true_time)
+            for r in master
+        ]
+
+    a = run_event_loop(
+        clone(), [Worker(_FifoObjScheduler(), _ConstExecutor())], engine="scalar"
+    )
+    b = run_event_loop(
+        clone(), [Worker(_FifoColsScheduler(), _ConstExecutor())], engine="array"
+    )
+    for f in _STABLE_FIELDS:
+        assert getattr(a, f) == getattr(b, f), f
+    assert a.latencies.tobytes() == b.latencies.tobytes()
