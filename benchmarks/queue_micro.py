@@ -420,3 +420,92 @@ def eventloop_throughput(full: bool = False,
             "sizes": out,
         },
     })
+
+
+def eventloop_faults(full: bool = False,
+                     json_path: str = "BENCH_sched.json") -> None:
+    """Fault-path overhead through ``run_event_loop``: the same FIFO
+    trace as :func:`eventloop_throughput`, replayed fault-free and under
+    an *active* :class:`~repro.serving.faults.FaultPlan` (crashes +
+    stragglers + retries), on both engines.  ``fault_slowdown`` =
+    fault-free events/s over faulted events/s per engine — it prices the
+    crash/abort/retry machinery including the extra events it schedules,
+    and the gate (``repro.eval.sched_gate``) caps it so the retry hooks
+    can never quietly regress the event loop.  Both engines must agree
+    exactly on the faulted outcome (asserted), the same bit-identity
+    contract the chaos grid gates."""
+    from repro.serving.faults import FaultPlan
+
+    tick_ms, rate_per_ms = 4.0, 64.0
+    sizes = (10_000, 100_000) if full else (10_000,)
+    reps = 3
+    # ~4 crashes over the 1e4-request trace's ~160 ms span; each abort
+    # re-queues a full FIFO batch through the retry gate.
+    plan = FaultPlan(
+        seed=0,
+        mttf_ms=40.0,
+        restart_delay_ms=5.0,
+        max_retries=2,
+        retry_backoff_ms=1.0,
+        straggler_prob=0.05,
+        straggler_factor=3.0,
+    )
+    out: dict[str, dict[str, float]] = {}
+    for n in sizes:
+        master = _eventloop_requests(n, tick_ms, rate_per_ms)
+        row: dict[str, float] = {}
+        results = {}
+        for engine in ("scalar", "array"):
+            per_mode = {}
+            for mode, faults in (("free", None), ("faulted", plan)):
+                best = float("inf")
+                for _ in range(reps):
+                    reqs = [
+                        Request(app_id=r.app_id, release=r.release, slo=r.slo,
+                                true_time=r.true_time)
+                        for r in master
+                    ]
+                    # object FIFO on BOTH engines: retries re-enter through
+                    # the object on_arrival path, which the columnar FIFO
+                    # deliberately refuses
+                    workers = [Worker(_FifoObjScheduler(), _ConstExecutor())]
+                    t0 = time.perf_counter()
+                    res = run_event_loop(
+                        reqs, workers, engine=engine, faults=faults
+                    )
+                    best = min(best, time.perf_counter() - t0)
+                per_mode[mode] = (res.n_total + res.n_batches) / best
+                if mode == "faulted":
+                    results[engine] = res
+            slowdown = per_mode["free"] / per_mode["faulted"]
+            row[f"{engine}_faulted_events_per_s"] = round(per_mode["faulted"], 1)
+            row[f"{engine}_fault_slowdown"] = round(slowdown, 3)
+        sc, ar = results["scalar"], results["array"]
+        assert (
+            sc.n_finished_ok, sc.n_finished_late, sc.n_failed,
+            sc.n_retried, sc.n_batches,
+        ) == (
+            ar.n_finished_ok, ar.n_finished_late, ar.n_failed,
+            ar.n_retried, ar.n_batches,
+        ), "engines diverged under the fault plan"
+        row["n_retried"] = sc.n_retried
+        row["n_failed"] = sc.n_failed
+        print(f"eventloop_faults/array/n{n},"
+              f"{1e6 / row['array_faulted_events_per_s']:.3f},"
+              f"slowdown={row['array_fault_slowdown']:.2f}x "
+              f"scalar_slowdown={row['scalar_fault_slowdown']:.2f}x "
+              f"retried={sc.n_retried}",
+              flush=True)
+        out[str(n)] = row
+
+    _merge_sched_artifact(json_path, {
+        "eventloop_faults": {
+            "unit_note": "events/s through run_event_loop under an active "
+                         "FaultPlan (crashes mttf=40ms + 5% stragglers + "
+                         "retry gate) vs fault-free on the same trace; "
+                         "fault_slowdown = free/faulted rate per engine; "
+                         "best of 3 reps",
+            "plan": plan.to_dict(),
+            "sizes": out,
+        },
+    })

@@ -36,6 +36,7 @@ def main() -> None:
         "fig12b": queue_micro.fig12_mixed_ops,
         "sched": queue_micro.sched_throughput,  # writes BENCH_sched.json
         "eventloop": queue_micro.eventloop_throughput,  # merges into BENCH_sched.json
+        "eventloop_faults": queue_micro.eventloop_faults,  # merges into BENCH_sched.json
         "fig13": sensitivity.fig13_b_sweep,
         "fig14": sensitivity.fig14_min_exec,
         "roofline": bench_roofline,

@@ -13,6 +13,7 @@ from typing import Sequence
 from .core import Rule
 from .rules import (
     DeterminismRule,
+    FaultSwallowRule,
     HotPathAllocRule,
     PrngKeyReuseRule,
     ReplayOrderRule,
@@ -27,6 +28,7 @@ ALL_RULES: tuple[Rule, ...] = (
     ReplayOrderRule(),
     HotPathAllocRule(),
     TracerHygieneRule(),
+    FaultSwallowRule(),
 )
 
 _BY_ID = {r.rule_id: r for r in ALL_RULES}

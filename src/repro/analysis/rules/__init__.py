@@ -12,6 +12,7 @@ from .units import UnitsRule
 from .replay import ReplayOrderRule
 from .hotpath import HotPathAllocRule
 from .tracer import TracerHygieneRule
+from .faultswallow import FaultSwallowRule
 
 __all__ = [
     "DeterminismRule",
@@ -20,4 +21,5 @@ __all__ = [
     "ReplayOrderRule",
     "HotPathAllocRule",
     "TracerHygieneRule",
+    "FaultSwallowRule",
 ]

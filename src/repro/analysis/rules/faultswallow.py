@@ -1,0 +1,138 @@
+"""R7 ``fault-swallow`` — bare ``except:`` and silently swallowed
+broad exception handlers.
+
+The fault-injection tier (``repro.serving.faults``) makes honest failure
+accounting a first-class contract: a request that cannot finish is
+*counted* as failed, never silently papered over.  A ``try`` body that
+swallows ``Exception`` with nothing but a fallback ``return`` defeats
+that — the simulation keeps running on a value nobody knows is fake, and
+conservation/equivalence violations surface far from their cause.
+
+Two shapes are flagged:
+
+- bare ``except:`` — always.  It catches ``KeyboardInterrupt`` and
+  ``SystemExit`` too; there is no justified use in library code.
+- ``except Exception`` / ``except BaseException`` whose handler both
+  *ignores the error* (the bound name — if any — is never read, and the
+  body never calls ``traceback.format_exc``/``sys.exc_info``/a logger's
+  ``.exception`` and never ``raise``\\ s) *and* is trivial: every
+  statement is ``pass``/``...``/``continue``/``break`` or a ``return``
+  of a side-effect-free expression (constants, names, attribute chains,
+  container displays thereof).
+
+Handlers that record the error, re-raise, or do real recovery work stay
+silent.  Narrow handlers (``except KeyError`` …) are out of scope — a
+specific exception type is itself the justification.  Deliberate
+boundary swallows (environment probes and the like) carry a
+``# simlint: ignore[R7] -- why`` or live in ``ANALYSIS_baseline.json``.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Iterator
+
+from ..core import FileContext, Finding
+
+_BROAD = {"Exception", "BaseException", "builtins.Exception", "builtins.BaseException"}
+# Calls that *observe* the in-flight exception without binding it.
+_OBSERVER_SUFFIXES = ("format_exc", "exc_info", "print_exc")
+
+
+class FaultSwallowRule:
+    rule_id = "R7"
+    name = "fault-swallow"
+    zones = ("src/repro",)
+    description = (
+        "bare `except:` or an `except Exception` that silently swallows "
+        "the error; catch narrowly, record the failure, or re-raise"
+    )
+
+    def check(self, ctx: FileContext) -> Iterator[Finding]:
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, ast.ExceptHandler):
+                continue
+            if node.type is None:
+                yield ctx.finding(
+                    self,
+                    node,
+                    "bare `except:` catches KeyboardInterrupt/SystemExit too; "
+                    "catch a specific exception (at most `Exception`)",
+                )
+                continue
+            caught = _caught_types(ctx, node.type)
+            if not (caught & _BROAD):
+                continue
+            if _observes_error(ctx, node):
+                continue
+            if not all(_is_trivial_stmt(s) for s in node.body):
+                continue
+            what = next(iter(caught & _BROAD)).rsplit(".", 1)[-1]
+            yield ctx.finding(
+                self,
+                node,
+                f"`except {what}` swallows the error without recording it; "
+                "catch narrowly, log/store the failure, or count it as failed",
+            )
+
+
+def _caught_types(ctx: FileContext, node: ast.AST) -> set[str]:
+    """Resolved dotted names of the caught exception type(s)."""
+    elts = node.elts if isinstance(node, ast.Tuple) else [node]
+    out: set[str] = set()
+    for e in elts:
+        dn = ctx.resolve(e)
+        if dn is not None:
+            out.add(dn)
+    return out
+
+
+def _observes_error(ctx: FileContext, handler: ast.ExceptHandler) -> bool:
+    """True when the handler body reads the bound exception, captures it
+    through a traceback/exc_info/logger call, or re-raises."""
+    bound = handler.name
+    for node in ast.walk(handler):
+        if node is handler:
+            continue
+        if isinstance(node, ast.Raise):
+            return True
+        if bound and isinstance(node, ast.Name) and node.id == bound:
+            if isinstance(node.ctx, ast.Load):
+                return True
+        if isinstance(node, ast.Call):
+            target = ctx.resolve_call(node)
+            if target is not None and (
+                target.endswith(_OBSERVER_SUFFIXES) or target.endswith(".exception")
+            ):
+                return True
+    return False
+
+
+def _is_trivial_stmt(stmt: ast.stmt) -> bool:
+    if isinstance(stmt, (ast.Pass, ast.Continue, ast.Break)):
+        return True
+    if isinstance(stmt, ast.Expr) and isinstance(stmt.value, ast.Constant):
+        return True  # docstring / `...`
+    if isinstance(stmt, ast.Return):
+        return stmt.value is None or _is_simple_expr(stmt.value)
+    return False
+
+
+def _is_simple_expr(node: ast.expr) -> bool:
+    """Side-effect-free fallback value: constants, names, attribute
+    chains, and tuple/list/set/dict displays built from those."""
+    if isinstance(node, ast.Constant):
+        return True
+    if isinstance(node, ast.Name):
+        return True
+    if isinstance(node, ast.Attribute):
+        return _is_simple_expr(node.value)
+    if isinstance(node, ast.UnaryOp):
+        return _is_simple_expr(node.operand)
+    if isinstance(node, (ast.Tuple, ast.List, ast.Set)):
+        return all(_is_simple_expr(e) for e in node.elts)
+    if isinstance(node, ast.Dict):
+        return all(k is not None and _is_simple_expr(k) for k in node.keys) and all(
+            _is_simple_expr(v) for v in node.values
+        )
+    return False

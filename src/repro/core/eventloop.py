@@ -97,6 +97,48 @@ class SchedulerLike(Protocol):
     ) -> None: ...
 
 
+class FaultPlanLike(Protocol):
+    """Duck-typed fault plan (:class:`repro.serving.faults.FaultPlan`).
+
+    The core engine never imports the serving layer — it only needs the
+    plan to materialize per-run state with seeded rng streams and the
+    gate/retry/straggler hooks the loops call."""
+
+    @property
+    def restart_delay_ms(self) -> float: ...
+
+    @property
+    def admission_floor(self) -> float: ...
+
+    @property
+    def batch_timeout_ms(self) -> float: ...
+
+    def enabled(self) -> bool: ...
+
+    def start(self, n_workers: int) -> "FaultStateLike": ...
+
+
+class FaultStateLike(Protocol):
+    plan: "FaultPlanLike"
+    crashes: bool
+
+    def next_crash(self, w: int, up_since: float) -> float: ...
+
+    def straggle(self, dur: float) -> float: ...
+
+    def admit(
+        self,
+        scheduler: "SchedulerLike",
+        req: Request,
+        now: float,
+        queued_ahead: int = 0,
+    ) -> bool: ...
+
+    def retry_decision(
+        self, scheduler: "SchedulerLike", req: Request, now: float
+    ) -> tuple[bool, float]: ...
+
+
 @dataclasses.dataclass
 class ModelExecutor:
     """Ground-truth execution following the paper's padding model."""
@@ -137,6 +179,28 @@ class SimResult:
     # real-engine eval tier pairs this with the executor's measured-batch
     # log to attribute predicted-vs-measured drift per executed batch.
     n_batches: int = 0
+    # Fault-tier terminal-state accounting (DESIGN.md §11): admission
+    # rejections, retry-exhausted failures after crash/timeout aborts,
+    # and the total number of retry dispatches (a request retried twice
+    # counts twice).
+    n_rejected: int = 0
+    n_failed: int = 0
+    n_retried: int = 0
+    # True when the run was cut off by ``wall_budget_s`` — partial stats,
+    # everything unresolved counted as unserved.
+    truncated: bool = False
+
+    @property
+    def conserved(self) -> bool:
+        """Hard conservation invariant: every request reaches exactly one
+        terminal state — finished (ok|late), dropped, rejected, failed —
+        or none (unserved).  The fault tier property-tests this across
+        engines and fleet mode."""
+        return (
+            self.n_finished_ok + self.n_finished_late + self.n_dropped
+            + self.n_unserved + self.n_rejected + self.n_failed
+            == self.n_total
+        )
 
     @property
     def sched_us_per_request(self) -> float:
@@ -318,6 +382,9 @@ DISPATCH_POLICIES: dict[str, Callable] = {
 }
 
 _ARRIVAL, _DONE, _WAKE = 0, 1, 2
+# Fault-tier event kinds (DESIGN.md §11): worker crash / worker restart /
+# deadline-aware retry of an aborted request / batch-timeout abort.
+_CRASH, _RESTART, _RETRY, _ABORT = 3, 4, 5, 6
 
 # Array-loop merge sources (where the next dynamic event comes from).
 _TAKE_BUF, _TAKE_BUCKET, _TAKE_ONE = 1, 2, 3
@@ -340,6 +407,8 @@ def run_event_loop(
     charge_scheduler_overhead: bool = False,
     seed: int = 0,
     engine: str = "scalar",
+    faults: "FaultPlanLike | None" = None,
+    wall_budget_s: float = 0.0,
 ) -> SimResult:
     """Drive ``workers`` replica schedulers against one arrival stream.
 
@@ -368,6 +437,15 @@ def run_event_loop(
     events*, but the scalar heap retains superseded-wake tombstones
     slightly differently than the wheel, so only the bound (not the exact
     value) is comparable.
+
+    ``faults`` is an optional :class:`~repro.serving.faults.FaultPlan`
+    (anything exposing ``start(n_workers)``): worker crashes, stragglers,
+    admission control and batch timeouts, replayed identically by both
+    engines from the plan's own seeded rng streams (DESIGN.md §11).
+    ``wall_budget_s > 0`` cuts the run off after that much *wall-clock*
+    time: the result is marked ``truncated`` and everything unresolved
+    counts as unserved — a graceful partial answer instead of a hung grid
+    cell.
     """
     workers = list(workers)
     if not workers:
@@ -392,6 +470,17 @@ def run_event_loop(
         raise ValueError(
             f"unknown engine {engine!r}; known: {list(ENGINES)}"
         )
+    fs = faults.start(n) if faults is not None else None
+    if fs is not None and (fs.crashes or fs.plan.batch_timeout_ms > 0.0):
+        # Crash termination leans on every scheduler's drop counter to
+        # decide whether unresolved work remains (all in-repo schedulers
+        # expose it); refuse silently-wrong accounting up front.
+        for w_ in workers:
+            if getattr(w_.scheduler, "n_timed_out", None) is None:
+                raise ValueError(
+                    "fault injection (crashes/batch timeouts) requires "
+                    "schedulers exposing n_timed_out"
+                )
     if engine == "array":
         return _array_loop(
             requests,
@@ -400,6 +489,8 @@ def run_event_loop(
             pick,
             horizon=horizon,
             charge_scheduler_overhead=charge_scheduler_overhead,
+            fs=fs,
+            wall_budget_s=wall_budget_s,
         )
 
     requests = sorted(requests, key=lambda r: r.release)
@@ -407,6 +498,30 @@ def run_event_loop(
     seq = itertools.count()
     for r in requests:
         heapq.heappush(events, (r.release, next(seq), _ARRIVAL, r))
+
+    plan = fs.plan if fs is not None else None
+    n_rejected = 0
+    n_failed = 0
+    n_retried = 0
+    n_finished = 0
+    truncated = False
+    down = [False] * n
+    # Per-worker crash epoch: a DONE/ABORT event carries the epoch its
+    # batch was dispatched under; a crash bumps the epoch so the stale
+    # completion becomes a tombstone when it fires.
+    epoch = [0] * n
+    # In-flight batch payloads, maintained only under a fault plan (the
+    # crash-abort path needs the batch; ``inflight`` keeps only spans).
+    running: list[Batch | None] = [None] * n
+    gate = plan is not None and plan.admission_floor > 0.0
+    timeout_ms = plan.batch_timeout_ms if plan is not None else 0.0
+    if fs is not None and fs.crashes:
+        # initial crash draws, one per worker in index order (the array
+        # loop mirrors this exactly, so seq numbers line up)
+        for w in range(n):
+            heapq.heappush(
+                events, (fs.next_crash(w, 0.0), next(seq), _CRASH, w)
+            )
 
     peak_heap = len(events)
     worker_busy_time = 0.0
@@ -421,7 +536,7 @@ def run_event_loop(
 
     def try_dispatch(w: int, now: float) -> None:
         nonlocal worker_busy_time, peak_heap, sched_time, n_decisions
-        if pool.busy[w]:
+        if pool.busy[w] or down[w]:
             return
         worker = workers[w]
         # simlint: ignore[R1] -- meters real scheduler overhead (reported, optionally charged as latency); the sim clock itself stays virtual
@@ -435,13 +550,24 @@ def run_event_loop(
         if batch is not None:
             start = now + overhead
             dur = worker.executor(batch, start)
+            ev_kind = _DONE
+            if fs is not None:
+                dur = fs.straggle(dur)
+                if 0.0 < timeout_ms < dur:
+                    # overlong batch: aborted at the timeout deadline,
+                    # its requests go through the retry gate
+                    dur = timeout_ms
+                    ev_kind = _ABORT
+                running[w] = batch
             for r in batch.requests:
                 r.started = start
                 pool.discharge(w, r.rid)
             pool.busy[w] = True
             worker_busy_time += dur
             inflight[w] = (start, start + dur)
-            heapq.heappush(events, (start + dur, next(seq), _DONE, (w, batch)))
+            heapq.heappush(
+                events, (start + dur, next(seq), ev_kind, (w, batch, epoch[w]))
+            )
             peak_heap = max(peak_heap, len(events))
         elif wake is not None and np.isfinite(wake) and wake > now:
             if pending_wake[w] is None or wake < pending_wake[w]:
@@ -452,8 +578,56 @@ def run_event_loop(
         # policy load signal honest
         pool.sweep_dropped(w)
 
+    def work_remains() -> bool:
+        # Any request without a terminal state yet, arrived or not.  A
+        # crash/restart only reschedules itself while this holds, so the
+        # renewal process cannot keep an otherwise-drained loop alive.
+        resolved = n_finished + n_rejected + n_failed
+        for w_ in workers:
+            resolved += w_.scheduler.n_timed_out  # type: ignore[attr-defined]
+        return resolved < len(requests)
+
+    def abort_batch(w: int, batch: Batch, now: float) -> None:
+        # Crash/timeout abort: each request re-enters through the
+        # deadline-aware retry gate or terminates honestly as failed.
+        nonlocal n_failed, n_retried, peak_heap
+        assert fs is not None
+        sched = workers[w].scheduler
+        for r in batch.requests:
+            r.started = None
+            retry, t_retry = fs.retry_decision(sched, r, now)
+            if retry:
+                r.retries += 1
+                n_retried += 1
+                heapq.heappush(events, (t_retry, next(seq), _RETRY, r))
+            else:
+                r.failed = now
+                n_failed += 1
+        peak_heap = max(peak_heap, len(events))
+
+    wall_deadline = None
+    if wall_budget_s > 0.0:
+        # simlint: ignore[R1] -- wall-budget truncation is real elapsed time by design; the sim clock stays virtual
+        wall_deadline = _time.perf_counter() + wall_budget_s
+    n_events = 0
     while events:
         now, _, kind, payload = heapq.heappop(events)
+        n_events += 1
+        if (
+            wall_deadline is not None
+            and not n_events & 1023
+            # simlint: ignore[R1] -- wall-budget truncation check (real elapsed time by design)
+            and _time.perf_counter() > wall_deadline
+        ):
+            # Out of wall-clock budget: stop observing at the last
+            # processed event (the popped one is discarded unprocessed),
+            # clamp in-flight busy credit exactly like the horizon path,
+            # and report the partial stats as ``truncated``.
+            truncated = True
+            for span in inflight:
+                if span is not None and span[1] > last_time:
+                    worker_busy_time -= span[1] - max(span[0], last_time)
+            break
         if horizon is not None and now > horizon:
             # Stop observing at the horizon: the clock reads ``horizon``
             # (not the time of the first event beyond it) and busy time is
@@ -493,6 +667,22 @@ def run_event_loop(
             buffered: dict[int, list[Request]] = {}
             for req in arrivals:
                 w = pick(req, now, pool) if n > 1 else 0
+                if gate and not fs.admit(
+                    workers[w].scheduler,
+                    req,
+                    now,
+                    # requests ahead on the picked worker: its queue, the
+                    # burst share buffered for it, and the in-flight batch
+                    getattr(workers[w].scheduler, "n_pending", 0)
+                    + pool.pending_offset[w]
+                    + (1 if pool.busy[w] else 0),
+                ):
+                    # shed at the front door: never queued, never charged
+                    # (the pick above still ran, so the policy rng stream
+                    # is identical with the gate on or off)
+                    req.rejected = now
+                    n_rejected += 1
+                    continue
                 pool.charge(w, req)
                 if pool.busy[w]:
                     # simlint: ignore[R5] -- group list created once per (burst, worker), not per request
@@ -515,10 +705,15 @@ def run_event_loop(
                         sched.on_arrival(req, now)
                 sched_time += _time.perf_counter() - t0  # simlint: ignore[R1] -- overhead meter, not sim time
         elif kind == _DONE:
-            w, batch = payload
+            w, batch, ep = payload
+            if ep != epoch[w]:
+                continue  # tombstone: the worker crashed under this batch
             pool.busy[w] = False
             inflight[w] = None
+            if fs is not None:
+                running[w] = None
             n_batches += 1
+            n_finished += len(batch.requests)
             for r in batch.requests:
                 r.finished = now
             t0 = _time.perf_counter()  # simlint: ignore[R1] -- overhead meter, not sim time
@@ -528,16 +723,84 @@ def run_event_loop(
             )
             sched_time += _time.perf_counter() - t0  # simlint: ignore[R1] -- overhead meter, not sim time
             try_dispatch(w, now)
-        else:  # _WAKE
+        elif kind == _WAKE:
             w = payload
             if pending_wake[w] is not None and now >= pending_wake[w]:
                 pending_wake[w] = None
+            try_dispatch(w, now)
+        elif kind == _ABORT:
+            w, batch, ep = payload
+            if ep != epoch[w]:
+                continue  # the worker crashed before the timeout fired
+            pool.busy[w] = False
+            inflight[w] = None
+            running[w] = None
+            abort_batch(w, batch, now)
+            try_dispatch(w, now)
+        elif kind == _CRASH:
+            w = payload
+            if work_remains():
+                # Kill the worker: bump its epoch (outstanding DONE/ABORT
+                # events become tombstones), abort any in-flight batch,
+                # schedule the restart.  With no work left the crash is
+                # discarded and nothing is rescheduled, so the heap
+                # drains and the loop terminates.
+                epoch[w] += 1
+                down[w] = True
+                span = inflight[w]
+                if span is not None:
+                    # credit only the work actually done before the crash
+                    worker_busy_time -= span[1] - max(span[0], now)
+                    inflight[w] = None
+                    pool.busy[w] = False
+                    doomed = running[w]
+                    running[w] = None
+                    assert doomed is not None
+                    abort_batch(w, doomed, now)
+                heapq.heappush(
+                    events,
+                    (now + plan.restart_delay_ms, next(seq), _RESTART, w),
+                )
+                peak_heap = max(peak_heap, len(events))
+        elif kind == _RESTART:
+            w = payload
+            down[w] = False
+            if work_remains():
+                heapq.heappush(
+                    events, (fs.next_crash(w, now), next(seq), _CRASH, w)
+                )
+                peak_heap = max(peak_heap, len(events))
+            try_dispatch(w, now)
+        else:  # _RETRY
+            req = payload
+            w = pick(req, now, pool) if n > 1 else 0
+            if down[w]:
+                # Dead-target re-route: deterministically drain to the
+                # next live sibling (fleet mode — a dead pool's requeued
+                # work flows across pool boundaries).  All-dead keeps the
+                # original target: it queues and the restart drains it.
+                for k in range(1, n):
+                    w2 = (w + k) % n
+                    if not down[w2]:
+                        w = w2
+                        break
+            pool.charge(w, req)
+            t0 = _time.perf_counter()  # simlint: ignore[R1] -- overhead meter, not sim time
+            workers[w].scheduler.on_arrival(req, now)
+            sched_time += _time.perf_counter() - t0  # simlint: ignore[R1] -- overhead meter, not sim time
             try_dispatch(w, now)
 
     ok = sum(1 for r in requests if r.ok)
     late = sum(1 for r in requests if r.finished is not None and not r.ok)
     dropped = sum(1 for r in requests if r.dropped is not None)
-    unserved = sum(1 for r in requests if r.finished is None and r.dropped is None)
+    # Unserved = no terminal state at all; scanned (not derived) so the
+    # conservation invariant stays a real, falsifiable property.
+    unserved = sum(
+        1
+        for r in requests
+        if r.finished is None and r.dropped is None
+        and r.rejected is None and r.failed is None
+    )
     lat = np.array(
         [r.finished - r.release for r in requests if r.finished is not None]
     )
@@ -555,6 +818,10 @@ def run_event_loop(
         sched_time_ms=sched_time * 1e3,
         n_decisions=n_decisions,
         n_batches=n_batches,
+        n_rejected=n_rejected,
+        n_failed=n_failed,
+        n_retried=n_retried,
+        truncated=truncated,
     )
 
 
@@ -578,6 +845,8 @@ def _array_loop(
     *,
     horizon: float | None,
     charge_scheduler_overhead: bool,
+    fs: "FaultStateLike | None" = None,
+    wall_budget_s: float = 0.0,
 ) -> SimResult:
     """The array-backed engine behind ``run_event_loop(engine="array")``.
 
@@ -623,7 +892,26 @@ def _array_loop(
     # arrivals sort first, exactly like the scalar heap's (time, seq) keys.
     seq = itertools.count(n_req)
 
-    peak_pending = n_req
+    plan = fs.plan if fs is not None else None
+    n_rejected = 0
+    n_failed = 0
+    n_retried = 0
+    n_finished = 0
+    truncated = False
+    down = [False] * n
+    # per-worker crash epoch — see the scalar loop's tombstone comment
+    epoch = [0] * n
+    # in-flight (batch, rows) payloads, maintained only under a fault plan
+    running: list[tuple[Batch, object] | None] = [None] * n
+    gate = plan is not None and plan.admission_floor > 0.0
+    timeout_ms = plan.batch_timeout_ms if plan is not None else 0.0
+    if fs is not None and fs.crashes:
+        # initial crash draws in worker index order — seqs continue from
+        # n_req exactly like the scalar loop's post-arrival pushes
+        for w in range(n):
+            wheel.push(fs.next_crash(w, 0.0), next(seq), _CRASH, w)
+
+    peak_pending = n_req + len(wheel)
     arr_left = n_req  # arrivals not yet delivered to a scheduler
     worker_busy_time = 0.0
     sched_time = 0.0  # wall-clock seconds inside scheduler hooks
@@ -658,7 +946,7 @@ def _array_loop(
 
     def try_dispatch(w: int, now: float) -> None:
         nonlocal worker_busy_time, peak_pending, sched_time, n_decisions
-        if busy[w]:
+        if busy[w] or down[w]:
             return
         worker = workers[w]
         # simlint: ignore[R1] -- meters real scheduler overhead (reported, optionally charged as latency); the sim clock itself stays virtual
@@ -672,6 +960,13 @@ def _array_loop(
         if batch is not None:
             start = now + overhead
             dur = worker.executor(batch, start)
+            ev_kind = _DONE
+            if fs is not None:
+                dur = fs.straggle(dur)
+                if 0.0 < timeout_ms < dur:
+                    # overlong batch: aborted at the timeout deadline
+                    dur = timeout_ms
+                    ev_kind = _ABORT
             rows = batch.rows
             if rows is None:
                 # simlint: ignore[R5] -- one row-index list per dispatched batch: the price of one fancy-indexed column write replacing per-request attribute churn
@@ -697,7 +992,11 @@ def _array_loop(
             busy[w] = True
             worker_busy_time += dur
             inflight[w] = (start, start + dur)
-            wheel.push(start + dur, next(seq), _DONE, (w, batch, rows))
+            if fs is not None:
+                running[w] = (batch, rows)
+            wheel.push(
+                start + dur, next(seq), ev_kind, (w, batch, rows, epoch[w])
+            )
             pending = arr_left + len(wheel)
             if pending > peak_pending:
                 peak_pending = pending
@@ -712,12 +1011,65 @@ def _array_loop(
         # policy load signal honest
         pool.sweep_dropped(w)
 
+    def work_remains() -> bool:
+        # see the scalar loop: crashes only reschedule while unresolved
+        # work exists anywhere, so the wheel can drain
+        resolved = n_finished + n_rejected + n_failed
+        for w_ in workers:
+            resolved += w_.scheduler.n_timed_out  # type: ignore[attr-defined]
+        return resolved < n_req
+
+    def abort_batch(w: int, batch: Batch, rows, now: float) -> None:
+        # Crash/timeout abort, array flavour: clear the started column
+        # for the aborted rows (writeback must not resurrect a phantom
+        # start), then run each request through the retry gate.
+        nonlocal n_failed, n_retried, peak_pending
+        assert fs is not None
+        if type(rows) is range:
+            started_col[rows.start:rows.stop] = np.nan
+        else:
+            started_col[np.asarray(rows, dtype=np.intp)] = np.nan
+        sched = workers[w].scheduler
+        for r in batch.requests:
+            if live_state:
+                r.started = None
+            retry, t_retry = fs.retry_decision(sched, r, now)
+            if retry:
+                r.retries += 1
+                n_retried += 1
+                wheel.push(t_retry, next(seq), _RETRY, r)
+            else:
+                r.failed = now
+                n_failed += 1
+        pending = arr_left + len(wheel)
+        if pending > peak_pending:
+            peak_pending = pending
+
+    wall_deadline = None
+    if wall_budget_s > 0.0:
+        # simlint: ignore[R1] -- wall-budget truncation is real elapsed time by design; the sim clock stays virtual
+        wall_deadline = pc() + wall_budget_s
+    n_events = 0
     gi = 0  # next arrival group
     buf: list = []  # in-hand wheel bucket (drained, partially consumed)
     bi = 0
     nbuf = 0
     ev: tuple = ()
     while True:
+        n_events += 1
+        if (
+            wall_deadline is not None
+            and not n_events & 1023
+            # simlint: ignore[R1] -- wall-budget truncation check (real elapsed time by design)
+            and pc() > wall_deadline
+        ):
+            # Out of wall-clock budget: stop at the last processed event
+            # and clamp busy credit, mirroring the scalar loop.
+            truncated = True
+            for span in inflight:
+                if span is not None and span[1] > last_time:
+                    worker_busy_time -= span[1] - max(span[0], last_time)
+            break
         # --- three-way merge: arrival cursor vs in-hand bucket vs wheel ---
         t_arr = gtimes[gi] if gi < ng else math.inf
         if bi < nbuf:
@@ -762,6 +1114,51 @@ def _array_loop(
                 # all, which is where the array engine's throughput lives.
                 sched0 = workers[0].scheduler
                 dr0 = row_delivers[0]
+                if gate:
+                    # Admission-gated single-worker path: per-request
+                    # probes mirror the scalar loop exactly (idle-phase
+                    # delivery with dispatch attempts, then one bulk
+                    # object flush for the admitted busy-phase tail).
+                    # Kept entirely off the fault-free fast path below.
+                    assert fs is not None
+                    # simlint: ignore[R5] -- one admitted-tail buffer per gated burst
+                    held: list[Request] = []
+                    for i in range(a, b):
+                        req = reqs[i]
+                        if not fs.admit(
+                            sched0,
+                            req,
+                            now,
+                            # mirrors the scalar backlog probe: len(held)
+                            # plays pending_offset's role (this path never
+                            # charges the pool)
+                            getattr(sched0, "n_pending", 0)
+                            + len(held)
+                            + (1 if busy[0] else 0),
+                        ):
+                            req.rejected = now
+                            n_rejected += 1
+                            continue
+                        if busy[0]:
+                            held.append(req)
+                            continue
+                        t0 = pc()  # simlint: ignore[R1] -- overhead meter, not sim time
+                        if dr0 is not None:
+                            dr0(store, i, now)
+                        else:
+                            sched0.on_arrival(req, now)
+                        sched_time += pc() - t0  # simlint: ignore[R1] -- overhead meter, not sim time
+                        try_dispatch(0, now)
+                    if held:
+                        deliver = delivers[0]
+                        t0 = pc()  # simlint: ignore[R1] -- overhead meter, not sim time
+                        if deliver is not None:
+                            deliver(held, now)
+                        else:
+                            for req in held:
+                                sched0.on_arrival(req, now)
+                        sched_time += pc() - t0  # simlint: ignore[R1] -- overhead meter, not sim time
+                    continue
                 i = a
                 while i < b and not busy[0]:
                     t0 = pc()  # simlint: ignore[R1] -- overhead meter, not sim time
@@ -796,6 +1193,19 @@ def _array_loop(
                 for i in range(a, b):
                     req = reqs[i]
                     w = pick(req, now, pool)
+                    if gate and not fs.admit(
+                        workers[w].scheduler,
+                        req,
+                        now,
+                        getattr(workers[w].scheduler, "n_pending", 0)
+                        + pool.pending_offset[w]
+                        + (1 if busy[w] else 0),
+                    ):
+                        # shed at the front door (pick already consumed
+                        # its rng draws — same stream with the gate off)
+                        req.rejected = now
+                        n_rejected += 1
+                        continue
                     pool.charge(w, req)
                     if busy[w]:
                         # simlint: ignore[R5] -- group list created once per (burst, worker), not per request
@@ -840,10 +1250,15 @@ def _array_loop(
             break
         last_time = now
         if kind == _DONE:
-            w, batch, rows = payload
+            w, batch, rows, ep = payload
+            if ep != epoch[w]:
+                continue  # tombstone: the worker crashed under this batch
             busy[w] = False
             inflight[w] = None
+            if fs is not None:
+                running[w] = None
             n_batches += 1
+            n_finished += len(batch.requests)
             if type(rows) is range:
                 finished_col[rows.start:rows.stop] = now
                 alone = store.true_time[rows.start:rows.stop].tolist()
@@ -858,10 +1273,65 @@ def _array_loop(
             workers[w].scheduler.on_batch_done(batch, now, alone)
             sched_time += pc() - t0  # simlint: ignore[R1] -- overhead meter, not sim time
             try_dispatch(w, now)
-        else:  # _WAKE
+        elif kind == _WAKE:
             w = payload
             if pending_wake[w] is not None and now >= pending_wake[w]:
                 pending_wake[w] = None
+            try_dispatch(w, now)
+        elif kind == _ABORT:
+            w, batch, rows, ep = payload
+            if ep != epoch[w]:
+                continue  # the worker crashed before the timeout fired
+            busy[w] = False
+            inflight[w] = None
+            running[w] = None
+            abort_batch(w, batch, rows, now)
+            try_dispatch(w, now)
+        elif kind == _CRASH:
+            w = payload
+            if work_remains():
+                # see the scalar loop: epoch bump tombstones the pending
+                # DONE/ABORT, the in-flight batch aborts, restart follows
+                epoch[w] += 1
+                down[w] = True
+                span = inflight[w]
+                if span is not None:
+                    worker_busy_time -= span[1] - max(span[0], now)
+                    inflight[w] = None
+                    busy[w] = False
+                    doomed = running[w]
+                    running[w] = None
+                    assert doomed is not None
+                    abort_batch(w, doomed[0], doomed[1], now)
+                wheel.push(
+                    now + plan.restart_delay_ms, next(seq), _RESTART, w
+                )
+                pending = arr_left + len(wheel)
+                if pending > peak_pending:
+                    peak_pending = pending
+        elif kind == _RESTART:
+            w = payload
+            down[w] = False
+            if work_remains():
+                wheel.push(fs.next_crash(w, now), next(seq), _CRASH, w)
+                pending = arr_left + len(wheel)
+                if pending > peak_pending:
+                    peak_pending = pending
+            try_dispatch(w, now)
+        else:  # _RETRY
+            req = payload
+            w = pick(req, now, pool) if n > 1 else 0
+            if down[w]:
+                # dead-target re-route — see the scalar loop
+                for k in range(1, n):
+                    w2 = (w + k) % n
+                    if not down[w2]:
+                        w = w2
+                        break
+            pool.charge(w, req)
+            t0 = pc()  # simlint: ignore[R1] -- overhead meter, not sim time
+            workers[w].scheduler.on_arrival(req, now)
+            sched_time += pc() - t0  # simlint: ignore[R1] -- overhead meter, not sim time
             try_dispatch(w, now)
 
     if not live_state:
@@ -876,7 +1346,9 @@ def _array_loop(
     no_drops = all(
         getattr(w_.scheduler, "n_timed_out", None) == 0 for w_ in workers
     )
-    ok, late, dropped, unserved, lat = store.fold_stats(no_drops=no_drops)
+    ok, late, dropped, unserved, lat = store.fold_stats(
+        no_drops=no_drops, n_off_ledger=n_rejected + n_failed
+    )
     return SimResult(
         n_total=n_req,
         n_finished_ok=ok,
@@ -891,6 +1363,10 @@ def _array_loop(
         sched_time_ms=sched_time * 1e3,
         n_decisions=n_decisions,
         n_batches=n_batches,
+        n_rejected=n_rejected,
+        n_failed=n_failed,
+        n_retried=n_retried,
+        truncated=truncated,
     )
 
 
@@ -901,6 +1377,8 @@ def simulate(
     horizon: float | None = None,
     charge_scheduler_overhead: bool = False,
     engine: str = "scalar",
+    faults: "FaultPlanLike | None" = None,
+    wall_budget_s: float = 0.0,
 ) -> SimResult:
     """The single-worker evaluation harness (§5) — the 1-worker case of
     :func:`run_event_loop`, kept as the stable entry point."""
@@ -911,4 +1389,6 @@ def simulate(
         horizon=horizon,
         charge_scheduler_overhead=charge_scheduler_overhead,
         engine=engine,
+        faults=faults,
+        wall_budget_s=wall_budget_s,
     )

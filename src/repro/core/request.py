@@ -94,10 +94,18 @@ class Request:
     extra_deadlines: tuple[tuple[float, float], ...] = ()
     payload: Any = None  # e.g. token ids for the real JAX engine
 
-    # Bookkeeping filled in by the simulator / engine.
+    # Bookkeeping filled in by the simulator / engine.  Exactly one of
+    # ``finished``/``dropped``/``rejected``/``failed`` is set at end of
+    # run (or none: unserved) — the conservation invariant the fault
+    # tier property-tests.
     started: float | None = None
     finished: float | None = None
     dropped: float | None = None
+    # Fault-tier terminal states: rejected at admission (never queued),
+    # or failed after a crash/timeout abort exhausted the retry gate.
+    rejected: float | None = None
+    failed: float | None = None
+    retries: int = 0
 
     @property
     def deadline(self) -> float:

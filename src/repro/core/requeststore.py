@@ -130,7 +130,7 @@ class RequestStore:
 
     # ------------------------------------------------------------- stats
     def fold_stats(
-        self, no_drops: bool = False
+        self, no_drops: bool = False, n_off_ledger: int = 0
     ) -> tuple[int, int, int, int, np.ndarray]:
         """Vectorized end-of-run accounting from the state columns:
         ``(ok, late, dropped, unserved, latencies)``, bit-identical to the
@@ -142,7 +142,13 @@ class RequestStore:
         off the hot path.  The caller may pass ``no_drops=True`` when it
         has *proven* nothing was dropped (every scheduler in the pool
         exposes an ``n_timed_out`` counter, incremented alongside every
-        ``req.dropped`` write, and all read zero) — that skips the scan."""
+        ``req.dropped`` write, and all read zero) — that skips the scan.
+
+        ``n_off_ledger`` is the count of requests the fault tier resolved
+        *outside* the columns (admission-rejected or retry-exhausted
+        ``failed`` — both look unfinished-and-undropped here): they are
+        subtracted from ``unserved`` so the caller's terminal-state
+        accounting conserves every request exactly once."""
         n = len(self.requests)
         fin = self.finished
         finished_mask = ~np.isnan(fin)
@@ -152,7 +158,7 @@ class RequestStore:
         late = n_finished - ok
         if no_drops:
             dropped = 0
-            unserved = n - n_finished
+            unserved = n - n_finished - n_off_ledger
         else:
             dropped_mask = np.fromiter(
                 (r.dropped is not None for r in self.requests),
@@ -160,7 +166,10 @@ class RequestStore:
                 count=n,
             )
             dropped = int(np.count_nonzero(dropped_mask))
-            unserved = int(np.count_nonzero(~finished_mask & ~dropped_mask))
+            unserved = (
+                int(np.count_nonzero(~finished_mask & ~dropped_mask))
+                - n_off_ledger
+            )
         latencies = (fin - self.release)[finished_mask]
         return ok, late, dropped, unserved, latencies
 

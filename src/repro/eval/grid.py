@@ -277,6 +277,192 @@ def cluster_smoke() -> list[ExperimentSpec]:
     )
 
 
+# --------------------------------------------------------------------------
+# Chaos grids (DESIGN.md §11): seeded fault injection over the same
+# lifecycle.  Every chaos cell carries a ``faults`` dict — even the
+# fault-free anchors, whose plans are *disabled* (every knob off) — so
+# the whole family is excluded from the paper-claim domains by
+# construction (claims._eligible filters on ``spec.faults``) and feeds
+# only the robustness claims ``fault-free-noop``, ``graceful-degradation``
+# and the fault-extended ``array-scalar-equivalence``.
+
+# Nominal virtual makespan of the 2-worker degradation cell (measured
+# ~36 s); the MTTF severity ladder is expressed in units of it.
+_CHAOS_SPAN_MS = 36_000.0
+# level name -> MTTF in units of _CHAOS_SPAN_MS (0 = crashes off).
+_CHAOS_LEVELS = (("off", 0.0), ("mild", 2.0), ("moderate", 0.5), ("severe", 0.15))
+
+
+def _chaos_plan(level_x: float, seed: int, **extra) -> dict:
+    """The degradation sweep's fault dict at one severity level.  At
+    ``level_x == 0`` the crash/straggler knobs are off but the dict is
+    still populated — a *disabled* plan that threads the hooks (the
+    fault-free-noop domain)."""
+    on = level_x > 0.0
+    return dict(
+        seed=101 + seed,
+        mttf_ms=level_x * _CHAOS_SPAN_MS,
+        restart_delay_ms=250.0 if on else 0.0,
+        max_retries=3,
+        retry_backoff_ms=10.0,
+        retry_threshold=0.05,
+        straggler_prob=0.05 if on else 0.0,
+        straggler_factor=2.5 if on else 1.0,
+        **extra,
+    )
+
+
+def _chaos_noop_twins(seeds: Sequence[int]) -> list[ExperimentSpec]:
+    """Paired cells per (engine, seed): identical specs except one has no
+    faults dict at all and the other a populated-but-*disabled* plan.
+    The fault-free-noop claim asserts each pair is bitwise identical —
+    i.e. threading the fault hooks costs nothing observable."""
+    base = dict(
+        workload="bimodal",
+        workload_params={"std": 1.0},
+        slo_scale=1.5,
+        utilization=0.85 * 2,
+        n_requests=300,
+        n_workers=2,
+        policy="round_robin",
+    )
+    return [
+        ExperimentSpec(
+            **base,
+            seed=seed,
+            engine=engine,
+            faults=faults,
+            tag=f"chaos/noop-{variant}/{engine}/s{seed}",
+        )
+        for seed in seeds
+        for engine in ("scalar", "array")
+        for variant, faults in (
+            ("bare", {}),
+            ("disabled", _chaos_plan(0.0, seed)),
+        )
+    ]
+
+
+def _chaos_equiv_cells(fleet: bool = True) -> list[ExperimentSpec]:
+    """Scalar/array twins under *active* plans (crashes + stragglers +
+    admission), extending the array-scalar-equivalence claim to the
+    fault tier; optionally one fleet pair so requeue re-dispatch across
+    pool boundaries is covered too."""
+    active = _chaos_plan(0.5, 13, admission_floor=0.05)
+    cells = [
+        ExperimentSpec(
+            workload="bimodal",
+            workload_params={"std": 1.0},
+            slo_scale=1.5,
+            utilization=0.85 * 4,
+            n_requests=500,
+            seed=13,
+            system="orloj",
+            n_workers=4,
+            policy="least_loaded",
+            engine=engine,
+            faults=dict(active),
+            tag=f"chaos/equiv-w4/{engine}",
+        )
+        for engine in ("scalar", "array")
+    ]
+    if fleet:
+        cells += [
+            ExperimentSpec(
+                workload="bimodal",
+                workload_params={"std": 1.0},
+                slo_scale=1.5,
+                utilization=0.85 * 6,
+                n_requests=500,
+                seed=13,
+                system="orloj",
+                n_workers=6,
+                policy="p2c",
+                n_pools=2,
+                intra_policy="round_robin",
+                engine=engine,
+                loop_seed=0,
+                faults=dict(active),
+                tag=f"chaos/equiv-fleet-w6p2/{engine}",
+            )
+            for engine in ("scalar", "array")
+        ]
+    return cells
+
+
+def _chaos_degradation(
+    seeds: Sequence[int], systems: Sequence[str] = SYSTEMS
+) -> list[ExperimentSpec]:
+    """The severity ladder: every compared system under each MTTF level
+    at the tight SLO (1.5 — where the dominance ordering is
+    reproducible).  Feeds graceful-degradation: per-system finish rate
+    must fall monotonically (within slack) with no cliff between
+    adjacent levels, and ORLOJ must stay on top at every level."""
+    return [
+        ExperimentSpec(
+            workload="bimodal",
+            workload_params={"std": 1.0},
+            slo_scale=1.5,
+            utilization=0.85 * 2,
+            n_requests=300,
+            seed=seed,
+            system=system,
+            n_workers=2,
+            policy="least_loaded",
+            faults=_chaos_plan(level_x, seed),
+            tag=f"chaos/degrade-{level}/{system}/s{seed}",
+        )
+        for level, level_x in _CHAOS_LEVELS
+        for system in systems
+        for seed in seeds
+    ]
+
+
+def chaos() -> list[ExperimentSpec]:
+    """The chaos grid: noop twins + scalar/array equivalence under
+    active plans (flat and fleet) + the graceful-degradation severity
+    ladder.  Gated on ``fault-free-noop``, ``graceful-degradation`` and
+    ``array-scalar-equivalence`` (claims layer)."""
+    return (
+        _chaos_noop_twins(seeds=(7, 11))
+        + _chaos_equiv_cells(fleet=True)
+        + _chaos_degradation(seeds=(7, 11, 23))
+    )
+
+
+def chaos_smoke() -> list[ExperimentSpec]:
+    """Trimmed CI tier of :func:`chaos`: one noop-twin set, the flat
+    equivalence pair, and a single-seed severity ladder over
+    {orloj, nexus, clockwork} (~30 s serial)."""
+    return (
+        _chaos_noop_twins(seeds=(7,))
+        + _chaos_equiv_cells(fleet=False)
+        + _chaos_degradation(seeds=(7,), systems=("orloj", "nexus", "clockwork"))
+    )
+
+
+def slo2_bimodal() -> list[ExperimentSpec]:
+    """Diagnostic grid for the intermediate-SLO regime (DESIGN.md §7):
+    bimodal at SLO scales around 2 x P99, ORLOJ vs Nexus, 5 seeds.
+    Feeds the *bounding* claim ``nexus-slo2-gap`` — the regime where
+    Nexus's fixed-batch plan is genuinely competitive in this repro is
+    documented and bounded, not asserted away."""
+    return [
+        ExperimentSpec(
+            workload="bimodal",
+            workload_params={"std": 1.0},
+            slo_scale=slo,
+            n_requests=300,
+            seed=seed,
+            system=system,
+            tag=f"slo2/bimodal/slo{slo:g}/{system}/s{seed}",
+        )
+        for slo in (1.75, 2.0, 2.25)
+        for system in ("orloj", "nexus")
+        for seed in _SMALL_SEEDS
+    ]
+
+
 GRIDS = {
     "tiny": tiny,
     "small": small,
@@ -284,6 +470,9 @@ GRIDS = {
     "engine-smoke": engine_smoke,
     "cluster": cluster_fleet,
     "cluster-smoke": cluster_smoke,
+    "chaos": chaos,
+    "chaos-smoke": chaos_smoke,
+    "slo2-bimodal": slo2_bimodal,
 }
 
 

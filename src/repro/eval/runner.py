@@ -40,6 +40,7 @@ from ..core import (
     run_event_loop,
 )
 from ..core.eventloop import Executor, SimResult
+from ..serving.faults import FaultPlan
 from ..serving.trace import RequestSet, TraceConfig, generate_requests
 from .spec import ExperimentResult, ExperimentSpec
 from .workloads import build_workload
@@ -135,6 +136,10 @@ def _fold_result(
         n_finished_late=res.n_finished_late,
         n_dropped=res.n_dropped,
         n_unserved=res.n_unserved,
+        n_rejected=res.n_rejected,
+        n_failed=res.n_failed,
+        n_retried=res.n_retried,
+        truncated=res.truncated,
         utilization=res.utilization,
         makespan_ms=res.makespan_ms,
         p99_alone_ms=rs.p99_alone,
@@ -185,6 +190,11 @@ def run_spec(spec: ExperimentSpec) -> ExperimentResult:
             intra=spec.intra_policy,
             seed=spec.seed if spec.loop_seed is None else spec.loop_seed,
         )
+    # Fault plan: spec.faults is a plain dict (artifact-serializable);
+    # an *empty* dict means no plan at all, while a populated-but-disabled
+    # dict still threads a FaultPlan through the engine hooks — that
+    # distinction is what makes the fault-free-noop claim non-vacuous.
+    faults = FaultPlan.from_dict(spec.faults) if spec.faults else None
     res = run_event_loop(
         rs.fresh(),
         _build_pool(spec, lm, rs, lambda i, wlm, slow: ModelExecutor(wlm, seed=i)),
@@ -192,6 +202,8 @@ def run_spec(spec: ExperimentSpec) -> ExperimentResult:
         charge_scheduler_overhead=spec.charge_overhead,
         seed=spec.seed if spec.loop_seed is None else spec.loop_seed,
         engine=spec.engine,
+        faults=faults,
+        wall_budget_s=spec.wall_budget_s,
     )
     # simlint: ignore[R1] -- wall_time_s metadata column; the replay itself is virtual-time
     return _fold_result(spec, rs, res, time.perf_counter() - t_wall)

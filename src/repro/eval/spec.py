@@ -81,8 +81,17 @@ class ExperimentSpec:
     tick_ms: float = 0.0
     # Wall-clock budget (s) for this cell; 0 = unbudgeted.  Budgeted cells
     # feed the cluster-wall-budget claim: the replay (wall_s) must finish
-    # inside the budget, which is what gates the fleet-scale grids.
+    # inside the budget, which is what gates the fleet-scale grids.  An
+    # overrun is graceful: the event loop cuts the replay off and the
+    # result comes back ``truncated`` with partial stats (everything
+    # unresolved counted unserved) instead of hanging the grid.
     wall_budget_s: float = 0.0
+    # Fault plan for this cell as a plain JSON object (the kwargs of
+    # :class:`repro.serving.faults.FaultPlan`).  Empty dict = no plan at
+    # all; a populated dict with every knob off is a *disabled* plan that
+    # still threads through the engine hooks (the fault-free-noop claim's
+    # domain).  DESIGN.md §11.
+    faults: dict = dataclasses.field(default_factory=dict)
     sched_cfg: dict = dataclasses.field(default_factory=dict)  # orloj only
     lm_c0: float = 25.0  # Eq.-3 batch latency model of the serving hardware
     lm_c1: float = 1.0
@@ -130,6 +139,14 @@ class ExperimentResult:
     sched_time_ms: float
     sched_us_per_request: float
     wall_s: float
+    # -- fault-tier terminal states (outcome fields; zero when no plan;
+    # defaulted so pre-fault artifacts still parse — DESIGN.md §11) --------
+    n_rejected: int = 0
+    n_failed: int = 0
+    n_retried: int = 0
+    # True when the replay was cut off at ``spec.wall_budget_s`` — partial
+    # outcome fields; ordering claims exclude truncated cells.
+    truncated: bool = False
     # Engine-substrate provenance (empty for sim cells): registry model,
     # profiled Eq.-3 constants, predicted-vs-measured batch-time drift, the
     # sim-twin comparison and the finish set (repro.eval.substrate).

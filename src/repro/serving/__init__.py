@@ -1,7 +1,13 @@
-"""Serving substrate: workloads, traces, batching, replica-pool dispatch
-and the real-execution engine that couples the ORLOJ scheduler to JAX
-model execution."""
+"""Serving substrate: workloads, traces, batching, replica-pool dispatch,
+the fault-injection tier, and the real-execution engine that couples the
+ORLOJ scheduler to JAX model execution."""
 
 from .cluster import simulate_cluster
+from .faults import FaultPlan, FaultState, finish_probability
 
-__all__ = ["simulate_cluster"]
+__all__ = [
+    "FaultPlan",
+    "FaultState",
+    "finish_probability",
+    "simulate_cluster",
+]

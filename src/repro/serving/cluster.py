@@ -41,6 +41,7 @@ from ..core.eventloop import (
     run_event_loop,
 )
 from ..core.request import Request
+from .faults import FaultPlan
 
 __all__ = [
     "DISPATCH_POLICIES",
@@ -190,10 +191,17 @@ def run_fleet(
     seed: int = 0,
     engine: str = "array",
     horizon: float | None = None,
+    faults: "FaultPlan | None" = None,
+    wall_budget_s: float = 0.0,
 ) -> SimResult:
     """Drive a two-level fleet: ``inter`` routing across ``n_pools``
     contiguous pools of ``workers``, ``intra`` within the winning pool.
-    Defaults to the array engine — fleet scale is what it exists for."""
+    Defaults to the array engine — fleet scale is what it exists for.
+
+    Under a ``faults`` plan with crashes, requeued work from a dead
+    pool's workers re-routes deterministically to live siblings (across
+    pool boundaries), so a dead pool drains instead of stranding its
+    queue (DESIGN.md §11)."""
     return run_event_loop(
         requests,
         list(workers),
@@ -203,6 +211,8 @@ def run_fleet(
         seed=seed,
         engine=engine,
         horizon=horizon,
+        faults=faults,
+        wall_budget_s=wall_budget_s,
     )
 
 
@@ -214,6 +224,7 @@ def simulate_cluster(
     seed: int = 0,
     horizon: float | None = None,
     charge_scheduler_overhead: bool = False,
+    faults: "FaultPlan | None" = None,
 ) -> SimResult:
     """Drive N replica schedulers (sharing ``executor``) against one
     arrival stream."""
@@ -224,4 +235,5 @@ def simulate_cluster(
         seed=seed,
         horizon=horizon,
         charge_scheduler_overhead=charge_scheduler_overhead,
+        faults=faults,
     )

@@ -27,6 +27,7 @@ from ..core.request import Request
 from ..core.scheduler import Batch
 from ..models import Model, ModelConfig
 from .batcher import make_padded_batch, padded_batch_size
+from .faults import FaultPlan
 from .trace import offered_rate
 
 __all__ = ["EngineConfig", "JaxExecutor", "ServingEngine"]
@@ -37,6 +38,11 @@ class EngineConfig:
     buckets: tuple[int, ...] = (32, 64, 128, 256)
     batch_sizes: tuple[int, ...] = (1, 2, 4, 8)
     profile_reps: int = 3
+    # When > 0, a batch whose measured execution exceeds this is aborted
+    # at the timeout and its requests go through the fault tier's
+    # deadline-aware retry gate (DESIGN.md §11) — the real engine's
+    # defense against a pathological straggler batch wedging the worker.
+    batch_timeout_ms: float = 0.0
 
 
 class JaxExecutor:
@@ -233,7 +239,10 @@ class ServingEngine:
 
     # ------------------------------------------------------------- run
     def serve(self, requests: Sequence[Request], scheduler) -> SimResult:
-        return simulate(list(requests), scheduler, self.executor)
+        faults = None
+        if self.cfg.batch_timeout_ms > 0.0:
+            faults = FaultPlan(batch_timeout_ms=self.cfg.batch_timeout_ms)
+        return simulate(list(requests), scheduler, self.executor, faults=faults)
 
     def serve_pool(
         self,

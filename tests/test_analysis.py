@@ -354,6 +354,82 @@ def test_r6_approves_static_idioms():
     assert active == []
 
 
+# ---------------------------------------------------------------- R7
+def test_r7_flags_bare_except_and_silent_swallow():
+    active, _ = run(
+        """
+        def probe(x):
+            try:
+                return x()
+            except:
+                pass
+
+        def fallback(leaf):
+            try:
+                return transform(leaf)
+            except Exception:
+                return leaf
+
+        def empty():
+            try:
+                return load()
+            except Exception:
+                return {}
+        """
+    )
+    assert rule_ids(active) == ["R7", "R7", "R7"]
+    assert "bare `except:`" in active[0].message
+    assert "swallows" in active[1].message
+
+
+def test_r7_silent_on_observed_recovered_or_narrow():
+    active, _ = run(
+        """
+        import traceback
+
+        def bound_and_used(x):
+            try:
+                return x()
+            except Exception as e:
+                return f"{type(e).__name__}: {e}"
+
+        def recorded(res, x):
+            try:
+                res.value = x()
+            except Exception:
+                res.error = traceback.format_exc()
+
+        def reraised(x):
+            try:
+                return x()
+            except Exception:
+                raise
+
+        def narrow(d):
+            try:
+                return d["k"]
+            except KeyError:
+                return None
+        """
+    )
+    assert active == []
+    # outside the src/repro zone the rule does not apply
+    active, _ = run(
+        "try:\n    f()\nexcept:\n    pass\n", path="tests/fake.py"
+    )
+    assert "R7" not in rule_ids(active)
+
+
+def test_r7_repo_swallow_sites_are_baselined():
+    # the three triaged boundary swallows stay in the committed baseline
+    base = Baseline.load("ANALYSIS_baseline.json")
+    r7 = [m for m in base.meta.values() if m["rule"] == "R7"]
+    assert {m["path"] for m in r7} == {
+        "src/repro/launch/dryrun.py",
+        "src/repro/models/blocks.py",
+    }
+
+
 # ------------------------------------------------------- suppressions
 def test_suppression_same_line_and_line_above():
     src = """
@@ -544,4 +620,4 @@ def test_repo_head_passes_the_gate(monkeypatch, capsys):
 
 def test_get_rules_selectors():
     assert [r.rule_id for r in get_rules(["R1", "prng-key-reuse"])] == ["R1", "R2"]
-    assert len(get_rules(None)) == 6
+    assert len(get_rules(None)) == 7

@@ -322,12 +322,15 @@ def test_scaleout_claim_separates_pool_shapes_and_needs_both_policies():
 
 
 def test_evaluate_claims_states_scaleout_only_with_pool_cells():
+    # single-slo dynamic cells: only the tight-slo claim has a domain
+    # (no static cells, no multi-slo series — per-domain scoping, §7/§11)
     solo = [_fake("orloj", 0.9), _fake("nexus", 0.8)]
-    assert [c.name for c in evaluate_claims(solo)] == [
-        "tight-slo-dominance",
-        "static-parity",
-        "slo-monotonicity",
+    assert [c.name for c in evaluate_claims(solo)] == ["tight-slo-dominance"]
+    with_static = solo + [
+        _fake("orloj", 0.9, family="static"),
+        _fake("nexus", 0.89, family="static"),
     ]
+    assert "static-parity" in {c.name for c in evaluate_claims(with_static)}
     pooled = solo + [
         _fake_pool("jsq_work", 0.9),
         _fake_pool("round_robin", 0.85),
@@ -556,8 +559,10 @@ def test_evaluate_claims_scopes_to_the_grid():
         _fake("orloj", 0.95, slo=3.0),
         _fake("nexus", 0.85, slo=3.0),
     ]
+    # dynamic-only multi-slo set: tight-slo + monotonicity have domains,
+    # static-parity has no static cells and is not stated
     names = {c.name for c in evaluate_claims(paper)}
-    assert names == {"tight-slo-dominance", "static-parity", "slo-monotonicity"}
+    assert names == {"tight-slo-dominance", "slo-monotonicity"}
 
 
 @pytest.mark.slow

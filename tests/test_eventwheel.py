@@ -9,6 +9,12 @@ import math
 import numpy as np
 import pytest
 
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ModuleNotFoundError:  # bare env: property tests skip, the rest run
+    from _hypothesis_stub import given, settings, st
+
 from repro.core.eventwheel import MAX_BUCKET_SPAN, EventWheel
 from repro.core.request import Request
 from repro.core.requeststore import RequestStore
@@ -93,6 +99,65 @@ def test_overflow_merges_into_bucket_window():
     w.push(far + 0.5, 2, 0, None)      # same bucket, now inside the window
     batch = w.pop_bucket()
     assert [(t, s) for t, s, _, _ in batch] == [(far, 1), (far + 0.5, 2)]
+
+
+def _fault_tail_events(rng, n_near, n_far, bucket_ms):
+    """Mixed near/far/non-finite stream shaped like a faulted run: normal
+    DONE/WAKE traffic plus CRASH(kind 3)/RESTART(kind 4) events whose
+    timestamps land far outside the bucket window (huge restart delays)
+    or at +inf (a next-crash renewal past everything)."""
+    _CRASH, _RESTART = 3, 4
+    events = []
+    seq = 0
+    for t in rng.uniform(0.0, 500.0, size=n_near):
+        events.append((float(t), seq, int(rng.integers(0, 3)), None))
+        seq += 1
+    far_base = (MAX_BUCKET_SPAN + 1) * bucket_ms
+    for t in rng.uniform(far_base, far_base * 50, size=n_far):
+        kind = _CRASH if seq % 2 else _RESTART
+        events.append((float(t), seq, kind, seq % 4))
+        seq += 1
+    events.append((math.inf, seq, _CRASH, 0))
+    return events
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+@pytest.mark.parametrize("bucket_ms", [0.5, 4.0, 64.0])
+def test_overflow_fault_events_keep_heapq_order(seed, bucket_ms):
+    """Crash/restart events at far-future and non-finite timestamps (the
+    shapes huge ``restart_delay_ms``/``mttf_ms`` plans produce) ride the
+    overflow heap yet drain in exact (time, seq) heapq order, mixed
+    pop/pop_bucket included."""
+    rng = np.random.default_rng(seed)
+    events = _fault_tail_events(rng, n_near=300, n_far=40, bucket_ms=bucket_ms)
+    w = EventWheel(bucket_ms)
+    for ev in events:
+        w.push(*ev)
+    got = []
+    while w:
+        if rng.random() < 0.5:
+            got.append(w.pop())
+        else:
+            got.extend(w.pop_bucket())
+    assert got == _heapq_order(events)
+
+
+@settings(max_examples=50, deadline=None)
+@given(
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+    bucket_ms=st.floats(min_value=1e-3, max_value=1e6),
+    n_near=st.integers(min_value=0, max_value=200),
+    n_far=st.integers(min_value=0, max_value=50),
+)
+def test_overflow_fault_order_property(seed, bucket_ms, n_near, n_far):
+    """Property form of the above: arbitrary bucket widths and near/far
+    mixes, total drain order ≡ heapq."""
+    rng = np.random.default_rng(seed)
+    events = _fault_tail_events(rng, n_near, n_far, bucket_ms)
+    w = EventWheel(bucket_ms)
+    for ev in events:
+        w.push(*ev)
+    assert list(w.drain()) == _heapq_order(events)
 
 
 def test_push_before_last_pop_raises():
