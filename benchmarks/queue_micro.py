@@ -12,8 +12,12 @@ scheduler with n pending) and ``next_batch`` latency at n ∈ {1e2, 1e3,
 The ``eventloop`` benchmark (DESIGN.md §10) measures the event *engine*
 itself — events/second through ``run_event_loop`` on the scalar oracle
 loop vs the array engine at 10⁴/10⁵ requests — and feeds the ≥5× floor
-gated by ``repro.eval.sched_gate``.  Both benchmarks merge their section
-into ``BENCH_sched.json`` without clobbering the other's.
+gated by ``repro.eval.sched_gate``.  The ``token_decode`` benchmark
+(DESIGN.md §12) prices the decode-step hook on the continuous-batching
+path: per-``on_decode_step``-call µs for both token schedulers, which
+the gate budgets absolutely (a hook that fires every token step must
+stay strictly cheap).  All benchmarks merge their section into
+``BENCH_sched.json`` without clobbering the others'.
 """
 
 from __future__ import annotations
@@ -506,6 +510,114 @@ def eventloop_faults(full: bool = False,
                          "fault_slowdown = free/faulted rate per engine; "
                          "best of 3 reps",
             "plan": plan.to_dict(),
+            "sizes": out,
+        },
+    })
+
+
+def _token_requests(n: int, rate_per_ms: float, ttft_ms: float,
+                    tpot_ms: float, seed: int = 0) -> list[Request]:
+    """Token-mode trace: geometric output lengths (mean 24), uniform
+    prompts, Poisson arrivals, implied TTFT/TPOT deadlines.  Deadlines
+    are generous relative to the DecodeModelExecutor step time so the
+    length-aware scheduler admits rather than drops — the run measures
+    hook cost, not SLO behaviour."""
+    rng = np.random.default_rng(seed)
+    out = np.maximum(rng.geometric(1.0 / 24.0, size=n), 1)
+    prompts = rng.integers(16, 129, size=n)
+    at = np.cumsum(rng.exponential(1.0 / rate_per_ms, size=n))
+    return [
+        Request(app_id="a", release=float(t),
+                slo=ttft_ms + tpot_ms * (float(o) - 1.0),
+                true_time=float(o), prompt_tokens=int(p), out_tokens=int(o))
+        for t, o, p in zip(at, out, prompts)
+    ]
+
+
+def token_decode(full: bool = False,
+                 json_path: str = "BENCH_sched.json") -> None:
+    """Decode-step hook cost on the continuous-batching path (DESIGN.md
+    §12).  Replays a token trace through ``run_event_loop`` with the
+    :class:`~repro.core.eventloop.DecodeModelExecutor` and both token
+    schedulers; ``decision_us`` = metered scheduler time over *all*
+    decisions (``next_batch`` + one ``on_decode_step`` per token step —
+    the latter dominates, firing once per step of every decode run), the
+    per-call number ``repro.eval.sched_gate`` budgets absolutely: this
+    hook runs on every token boundary, so unlike ``next_batch`` it has
+    no batch of work to amortize against.  Scalar and array engines
+    must agree exactly on the token outcome (asserted) — the
+    continuous-batching extension of the engine-equivalence contract."""
+    from repro.core.eventloop import DecodeModelExecutor
+    from repro.core.tokensched import (
+        FcfsTokenScheduler,
+        LengthAwareTokenScheduler,
+        TokenSchedConfig,
+    )
+
+    cfg = TokenSchedConfig(max_batch=16, ttft_slo_ms=200.0, tpot_slo_ms=12.0)
+    # ~0.8 load on a worker continuously batching at k=16: k tokens per
+    # (d0 + d1*k) ms step, E[out]=24 tokens per request.
+    rate_per_ms = 0.8 * 16 / ((cfg.d0 + cfg.d1 * 16) * 24.0)
+    sizes = (2_000, 10_000) if full else (2_000,)
+    reps = 3
+    systems = (
+        ("token_fcfs", lambda: FcfsTokenScheduler(cfg)),
+        ("token_orloj", lambda: LengthAwareTokenScheduler(cfg)),
+    )
+    out: dict[str, dict[str, float]] = {}
+    for n in sizes:
+        master = _token_requests(n, rate_per_ms, cfg.ttft_slo_ms,
+                                 cfg.tpot_slo_ms)
+        row: dict[str, float] = {}
+        for name, mk in systems:
+            results = {}
+            per_engine: dict[str, float] = {}
+            for engine in ("scalar", "array"):
+                best_us, best_steps = float("inf"), 0.0
+                for _ in range(reps):
+                    reqs = [
+                        Request(app_id=r.app_id, release=r.release,
+                                slo=r.slo, true_time=r.true_time,
+                                prompt_tokens=r.prompt_tokens,
+                                out_tokens=r.out_tokens)
+                        for r in master
+                    ]
+                    workers = [Worker(mk(), DecodeModelExecutor(
+                        cfg.d0, cfg.d1, cfg.prefill_per_token))]
+                    t0 = time.perf_counter()
+                    res = run_event_loop(reqs, workers, engine=engine)
+                    wall = time.perf_counter() - t0
+                    best_us = min(
+                        best_us, 1e3 * res.sched_time_ms / res.n_decisions
+                    )
+                    best_steps = max(best_steps, res.n_decisions / wall)
+                results[engine] = res
+                per_engine[engine] = best_us
+            sc, ar = results["scalar"], results["array"]
+            assert (sc.n_finished_ok, sc.n_finished_late, sc.n_dropped,
+                    sc.n_batches, sc.n_decisions) == (
+                ar.n_finished_ok, ar.n_finished_late, ar.n_dropped,
+                ar.n_batches, ar.n_decisions
+            ), f"engines diverged on the token trace under {name}"
+            # The hook is pure scheduler python, identical on both
+            # engines; record the cheaper measurement.
+            row[f"{name}_decision_us"] = round(min(per_engine.values()), 3)
+            row[f"{name}_steps_per_s"] = round(best_steps, 1)
+            row[f"{name}_n_decisions"] = sc.n_decisions
+        print(f"token_decode/orloj/n{n},{row['token_orloj_decision_us']:.3f},"
+              f"fcfs_us={row['token_fcfs_decision_us']:.3f} "
+              f"decisions={row['token_orloj_n_decisions']}",
+              flush=True)
+        out[str(n)] = row
+
+    _merge_sched_artifact(json_path, {
+        "token_decode": {
+            "unit_note": "metered scheduler us per decision (next_batch + "
+                         "on_decode_step, hook-dominated) through "
+                         "run_event_loop with DecodeModelExecutor on a "
+                         "geometric-length token trace at ~0.8 load; "
+                         "best of 3 reps, min over engines",
+            "max_batch": cfg.max_batch,
             "sizes": out,
         },
     })

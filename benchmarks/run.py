@@ -37,6 +37,7 @@ def main() -> None:
         "sched": queue_micro.sched_throughput,  # writes BENCH_sched.json
         "eventloop": queue_micro.eventloop_throughput,  # merges into BENCH_sched.json
         "eventloop_faults": queue_micro.eventloop_faults,  # merges into BENCH_sched.json
+        "token_decode": queue_micro.token_decode,  # merges into BENCH_sched.json
         "fig13": sensitivity.fig13_b_sweep,
         "fig14": sensitivity.fig14_min_exec,
         "roofline": bench_roofline,

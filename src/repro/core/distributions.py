@@ -148,6 +148,47 @@ class EmpiricalDistribution:
     def iid_max(self, k: int) -> "EmpiricalDistribution":
         return iid_max(self, k)
 
+    # -- conditional tail (token-mode remaining-length view) ------------------
+    def conditional_tail(self, t: float) -> "EmpiricalDistribution":
+        """Distribution of ``X | X > t`` — the renormalized upper tail.
+
+        The per-step view token-level scheduling needs (DESIGN.md §12): a
+        request that has already produced ``t`` tokens without hitting EOS
+        has remaining-length distribution ``(X − t) | X > t``; this returns
+        the un-shifted conditional ``X | X > t`` (shift by ``−t`` via the
+        caller, or use :meth:`expected_remaining` for the mean directly).
+        Exact under the piecewise-linear CDF."""
+        edges = self.edges
+        if t <= edges[0]:
+            return self
+        tail = 1.0 - float(self.cdf(t))
+        if t >= edges[-1] or tail <= 0.0:
+            raise ValueError(f"no mass above t={t} (support ends at {self.hi})")
+        i = int(np.searchsorted(edges, t, side="right"))
+        new_edges = np.concatenate([[t], edges[i:]])
+        cdf = np.interp(new_edges, edges, self._cdf_knots)
+        return EmpiricalDistribution(new_edges, np.diff(cdf))
+
+    def expected_remaining(self, t: float) -> float:
+        """``E[X − t | X > t]`` — exact under the piecewise-linear CDF.
+
+        ``∫_t^hi (1 − F(x)) dx / (1 − F(t))``; integrand is linear on each
+        segment, so the trapezoid over the knots above ``t`` is exact.
+        Returns 0 when no mass lies above ``t`` (the tail is exhausted —
+        callers treat this as "expected to finish immediately")."""
+        edges = self.edges
+        if t >= edges[-1]:
+            return 0.0
+        knots = self._cdf_knots
+        st = 1.0 - float(np.interp(t, edges, knots, left=0.0, right=1.0))
+        if st <= 1e-12:
+            return 0.0
+        i = int(np.searchsorted(edges, t, side="right"))
+        xs = np.concatenate([[t], edges[i:]])
+        ys = 1.0 - np.interp(xs, edges, knots, left=0.0, right=1.0)
+        area = float(np.sum((ys[:-1] + ys[1:]) * np.diff(xs)) * 0.5)
+        return area / st
+
     # -- exact piecewise integrals -------------------------------------------
     def expected_max(self, k: int) -> float:
         """``E[max of k i.i.d. draws]`` — exact under piecewise-linear CDF.

@@ -67,10 +67,13 @@ from .scheduler import Batch
 __all__ = [
     "DISPATCH_POLICIES",
     "ENGINES",
+    "DecodeExecutorLike",
+    "DecodeModelExecutor",
     "Executor",
     "ModelExecutor",
     "SchedulerLike",
     "SimResult",
+    "TokenSchedulerLike",
     "Worker",
     "run_event_loop",
     "simulate",
@@ -95,6 +98,38 @@ class SchedulerLike(Protocol):
     def on_batch_done(
         self, batch: Batch, now: float, alone_times_ms: Sequence[float]
     ) -> None: ...
+
+
+class TokenSchedulerLike(SchedulerLike, Protocol):
+    """The extra hook a token-mode scheduler implements (DESIGN.md §12).
+
+    A scheduler opts into iteration-level (continuous) batching by
+    returning ``Batch(decode=True)`` from ``next_batch``.  The loop then
+    calls ``on_decode_step`` once per decode iteration — after EOS
+    removals, before the next step is armed — and the scheduler answers
+    with the requests to admit into the running batch at this token
+    boundary (possibly none).  ``on_batch_done`` is never called for
+    decode batches."""
+
+    def on_decode_step(
+        self, finished: Sequence[Request], n_active: int, now: float
+    ) -> list[Request]: ...
+
+
+class DecodeExecutorLike(Protocol):
+    """Executor contract for resumable decode executions.
+
+    ``active`` is the continuous batch *after* this step's joins;
+    ``joined`` are the members whose prompt prefill is folded into this
+    step (Orca-style piggybacked prefill).  At initial dispatch both are
+    the full batch.  Returns the step duration in ms."""
+
+    def step_time(
+        self,
+        active: Sequence[Request],
+        joined: Sequence[Request],
+        now: float,
+    ) -> float: ...
 
 
 class FaultPlanLike(Protocol):
@@ -155,6 +190,103 @@ class ModelExecutor:
         if self.jitter > 0:
             t *= float(np.exp(self._rng.normal(0.0, self.jitter)))
         return t
+
+
+@dataclasses.dataclass
+class DecodeModelExecutor:
+    """Ground-truth token-level execution (the Eq.-3 analogue per decode
+    iteration): one step over a continuous batch of ``k`` requests costs
+    ``d0 + d1·k`` ms (every member produces one token; max_r l_r is one
+    token-time), plus ``prefill_per_token`` ms for each prompt token of
+    the members whose prefill piggybacks on this step — the concrete
+    source of prefill/decode interference.  Deterministic by construction,
+    so both engines replay identical step timestamps."""
+
+    d0: float = 2.0
+    d1: float = 0.25
+    prefill_per_token: float = 0.02
+
+    def step_time(
+        self,
+        active: Sequence[Request],
+        joined: Sequence[Request],
+        now: float,
+    ) -> float:
+        t = self.d0 + self.d1 * len(active)
+        if joined:
+            t += self.prefill_per_token * sum(r.prompt_tokens for r in joined)
+        return t
+
+    def __call__(self, batch: Batch, now: float) -> float:
+        raise TypeError(
+            "DecodeModelExecutor serves resumable decode batches only; "
+            "atomic batches need a ModelExecutor"
+        )
+
+
+class _DecodeRun:
+    """Mutable state of one resumable decode execution — one per
+    dispatched ``decode=True`` batch, threaded through the re-armed
+    ``_STEP`` events.  ``rows`` (array engine only) tracks each active
+    request's store row, aligned with ``active``."""
+
+    __slots__ = ("batch", "active", "rows")
+
+    def __init__(
+        self, batch: Batch, active: list[Request], rows: list[int] | None
+    ) -> None:
+        self.batch = batch
+        self.active = active
+        self.rows = rows
+
+
+def _advance_decode(
+    run: _DecodeRun, now: float
+) -> tuple[list[Request], list[int]]:
+    """Advance every active request by one produced token and split off
+    those hitting EOS this step.  The single token-accounting path both
+    engines share, so ``tokens_done``/``first_token``/EOS timestamps are
+    bit-identical by construction.  Returns ``(finished, finished_rows)``;
+    rows are tracked only when the run carries them (array engine)."""
+    rows = run.rows
+    finished: list[Request] = []
+    fin_rows: list[int] = []
+    still: list[Request] = []
+    still_rows: list[int] = []
+    for i, r in enumerate(run.active):
+        r.tokens_done += 1
+        if r.first_token is None:
+            r.first_token = now
+        if r.tokens_done >= r.out_tokens:
+            finished.append(r)
+            if rows is not None:
+                fin_rows.append(rows[i])
+        else:
+            still.append(r)
+            if rows is not None:
+                still_rows.append(rows[i])
+    run.active = still
+    if rows is not None:
+        run.rows = still_rows
+    return finished, fin_rows
+
+
+def _decode_step_dur(
+    executor: Executor,
+    active: Sequence[Request],
+    joined: Sequence[Request],
+    now: float,
+) -> float:
+    """One decode-step duration via the executor's ``step_time`` hook,
+    with an actionable error for executors that only run atomic batches."""
+    step = getattr(executor, "step_time", None)
+    if step is None:
+        raise TypeError(
+            f"scheduler returned a decode batch but executor "
+            f"{type(executor).__name__} has no step_time (token mode "
+            f"needs a DecodeExecutorLike, e.g. DecodeModelExecutor)"
+        )
+    return step(active, joined, now)
 
 
 @dataclasses.dataclass
@@ -385,6 +517,9 @@ _ARRIVAL, _DONE, _WAKE = 0, 1, 2
 # Fault-tier event kinds (DESIGN.md §11): worker crash / worker restart /
 # deadline-aware retry of an aborted request / batch-timeout abort.
 _CRASH, _RESTART, _RETRY, _ABORT = 3, 4, 5, 6
+# Token-mode event kind (DESIGN.md §12): one decode iteration of a
+# resumable execution — a DONE that may re-arm itself.
+_STEP = 7
 
 # Array-loop merge sources (where the next dynamic event comes from).
 _TAKE_BUF, _TAKE_BUCKET, _TAKE_ONE = 1, 2, 3
@@ -547,7 +682,32 @@ def run_event_loop(
         sched_time += dt
         n_decisions += 1
         overhead = dt * 1e3 if charge_scheduler_overhead else 0.0
-        if batch is not None:
+        if batch is not None and getattr(batch, "decode", False):
+            # Resumable token-level execution (DESIGN.md §12): the dispatch
+            # step prefills every initial member and produces their first
+            # token; the run then re-arms _STEP events until the last
+            # member hits EOS.
+            if fs is not None:
+                raise ValueError(
+                    "decode (token-level) batches are not supported "
+                    "under fault injection"
+                )
+            start = now + overhead
+            run = _DecodeRun(batch, list(batch.requests), None)
+            dur = _decode_step_dur(
+                worker.executor, run.active, batch.requests, start
+            )
+            for r in batch.requests:
+                r.started = start
+                pool.discharge(w, r.rid)
+            pool.busy[w] = True
+            worker_busy_time += dur
+            inflight[w] = (start, start + dur)
+            heapq.heappush(
+                events, (start + dur, next(seq), _STEP, (w, run, epoch[w]))
+            )
+            peak_heap = max(peak_heap, len(events))
+        elif batch is not None:
             start = now + overhead
             dur = worker.executor(batch, start)
             ev_kind = _DONE
@@ -723,6 +883,45 @@ def run_event_loop(
             )
             sched_time += _time.perf_counter() - t0  # simlint: ignore[R1] -- overhead meter, not sim time
             try_dispatch(w, now)
+        elif kind == _STEP:
+            # One decode iteration of a resumable execution: advance token
+            # counts, retire EOS requests, let the scheduler admit joiners
+            # at this token boundary, then re-arm (or drain the run).
+            w, run, ep = payload
+            if ep != epoch[w]:
+                continue  # tombstone (decode runs never coexist with faults today, but keep the contract uniform)
+            finished, _ = _advance_decode(run, now)
+            n_finished += len(finished)
+            for r in finished:
+                r.finished = now
+            t0 = _time.perf_counter()  # simlint: ignore[R1] -- overhead meter, not sim time
+            joined = workers[w].scheduler.on_decode_step(
+                finished, len(run.active), now
+            )
+            sched_time += _time.perf_counter() - t0  # simlint: ignore[R1] -- overhead meter, not sim time
+            n_decisions += 1
+            if joined:
+                for r in joined:
+                    r.started = now
+                    pool.discharge(w, r.rid)
+                run.active.extend(joined)
+            if run.active:
+                dur = _decode_step_dur(
+                    workers[w].executor, run.active, joined, now
+                )
+                worker_busy_time += dur
+                inflight[w] = (now, now + dur)
+                heapq.heappush(
+                    events, (now + dur, next(seq), _STEP, (w, run, ep))
+                )
+                peak_heap = max(peak_heap, len(events))
+            else:
+                n_batches += 1
+                pool.busy[w] = False
+                inflight[w] = None
+                try_dispatch(w, now)
+            # the admission hook may also have timed requests out
+            pool.sweep_dropped(w)
         elif kind == _WAKE:
             w = payload
             if pending_wake[w] is not None and now >= pending_wake[w]:
@@ -957,7 +1156,50 @@ def _array_loop(
         sched_time += dt
         n_decisions += 1
         overhead = dt * 1e3 if charge_scheduler_overhead else 0.0
-        if batch is not None:
+        if batch is not None and getattr(batch, "decode", False):
+            # Resumable token-level execution — the array flavour of the
+            # scalar loop's decode dispatch: identical hook order and
+            # timestamps, with per-batch column writes for ``started``.
+            if fs is not None:
+                raise ValueError(
+                    "decode (token-level) batches are not supported "
+                    "under fault injection"
+                )
+            start = now + overhead
+            rows = batch.rows
+            if rows is None:
+                # simlint: ignore[R5] -- one row-index list per dispatched decode batch
+                rows = store.rows_for(batch.requests)
+            if type(rows) is range and rows.step == 1:
+                started_col[rows.start:rows.stop] = start
+            else:
+                rows = np.asarray(rows, dtype=np.intp)
+                started_col[rows] = start
+            run = _DecodeRun(
+                batch, list(batch.requests), [int(x) for x in rows]
+            )
+            dur = _decode_step_dur(
+                worker.executor, run.active, batch.requests, start
+            )
+            if pool.track_work:
+                if live_state:
+                    for r in batch.requests:
+                        r.started = start
+                        pool.discharge(w, r.rid)
+                else:
+                    for r in batch.requests:
+                        pool.discharge(w, r.rid)
+            elif live_state:
+                for r in batch.requests:
+                    r.started = start
+            busy[w] = True
+            worker_busy_time += dur
+            inflight[w] = (start, start + dur)
+            wheel.push(start + dur, next(seq), _STEP, (w, run, epoch[w]))
+            pending = arr_left + len(wheel)
+            if pending > peak_pending:
+                peak_pending = pending
+        elif batch is not None:
             start = now + overhead
             dur = worker.executor(batch, start)
             ev_kind = _DONE
@@ -1273,6 +1515,60 @@ def _array_loop(
             workers[w].scheduler.on_batch_done(batch, now, alone)
             sched_time += pc() - t0  # simlint: ignore[R1] -- overhead meter, not sim time
             try_dispatch(w, now)
+        elif kind == _STEP:
+            # One decode iteration — mirrors the scalar loop's handler
+            # exactly (same hook order, same timestamps), with ``finished``
+            # landing in the store column per step instead of per object.
+            w, run, ep = payload
+            if ep != epoch[w]:
+                continue  # tombstone (kept uniform with _DONE)
+            finished, fin_rows = _advance_decode(run, now)
+            n_finished += len(finished)
+            if fin_rows:
+                finished_col[np.asarray(fin_rows, dtype=np.intp)] = now
+            if live_state:
+                for r in finished:
+                    r.finished = now
+            t0 = pc()  # simlint: ignore[R1] -- overhead meter, not sim time
+            joined = workers[w].scheduler.on_decode_step(
+                finished, len(run.active), now
+            )
+            sched_time += pc() - t0  # simlint: ignore[R1] -- overhead meter, not sim time
+            n_decisions += 1
+            if joined:
+                # simlint: ignore[R5] -- one row-index list per join group
+                jrows = store.rows_for(joined)
+                started_col[np.asarray(jrows, dtype=np.intp)] = now
+                run.rows.extend(int(x) for x in jrows)
+                if pool.track_work:
+                    if live_state:
+                        for r in joined:
+                            r.started = now
+                            pool.discharge(w, r.rid)
+                    else:
+                        for r in joined:
+                            pool.discharge(w, r.rid)
+                elif live_state:
+                    for r in joined:
+                        r.started = now
+                run.active.extend(joined)
+            if run.active:
+                dur = _decode_step_dur(
+                    workers[w].executor, run.active, joined, now
+                )
+                worker_busy_time += dur
+                inflight[w] = (now, now + dur)
+                wheel.push(now + dur, next(seq), _STEP, (w, run, ep))
+                pending = arr_left + len(wheel)
+                if pending > peak_pending:
+                    peak_pending = pending
+            else:
+                n_batches += 1
+                busy[w] = False
+                inflight[w] = None
+                try_dispatch(w, now)
+            # the admission hook may also have timed requests out
+            pool.sweep_dropped(w)
         elif kind == _WAKE:
             w = payload
             if pending_wake[w] is not None and now >= pending_wake[w]:

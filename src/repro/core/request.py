@@ -94,6 +94,17 @@ class Request:
     extra_deadlines: tuple[tuple[float, float], ...] = ()
     payload: Any = None  # e.g. token ids for the real JAX engine
 
+    # Token-level (continuous batching) fields.  ``prompt_tokens`` is
+    # visible to schedulers (the prompt is known at admission);
+    # ``out_tokens`` is the hidden ground-truth output length — the
+    # data-dependent quantity nobody knows until EOS, the token-mode
+    # analogue of ``true_time`` (§3.1 partial-information constraint).
+    # In token mode ``slo``/``deadline`` are *derived from* ``out_tokens``
+    # (slo = TTFT + TPOT·(out_tokens−1)), so they are hidden from token
+    # schedulers by the same convention (DESIGN.md §12).
+    prompt_tokens: int = 0
+    out_tokens: int = 0
+
     # Bookkeeping filled in by the simulator / engine.  Exactly one of
     # ``finished``/``dropped``/``rejected``/``failed`` is set at end of
     # run (or none: unserved) — the conservation invariant the fault
@@ -106,6 +117,11 @@ class Request:
     rejected: float | None = None
     failed: float | None = None
     retries: int = 0
+    # Token-mode bookkeeping, written by the decode-step machinery:
+    # ``tokens_done`` advances once per decode iteration; ``first_token``
+    # is the virtual time the first output token completed (TTFT anchor).
+    tokens_done: int = 0
+    first_token: float | None = None
 
     @property
     def deadline(self) -> float:

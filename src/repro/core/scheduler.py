@@ -113,11 +113,19 @@ class Batch:
     writes into O(1) numpy slice assignments; ``None`` (every existing
     scheduler) means the engine resolves rows itself via
     ``RequestStore.rows_for``.  The scalar loop ignores the field.
+
+    ``decode=True`` marks a *resumable* token-level execution (DESIGN.md
+    §12): instead of completing atomically, the batch advances in decode
+    steps — requests join at step boundaries via the scheduler's
+    ``on_decode_step`` hook and leave at their (data-dependent) EOS step.
+    Requires a worker executor exposing ``step_time`` and a scheduler
+    implementing the token-mode contract (:mod:`repro.core.tokensched`).
     """
 
     requests: list[Request]
     batch_size: int
     rows: "range | list[int] | None" = None
+    decode: bool = False
 
     def __len__(self) -> int:
         return len(self.requests)

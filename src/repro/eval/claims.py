@@ -99,7 +99,9 @@ __all__ = [
     "FAULT_DOMINANCE_SLACK",
     "NEXUS_SLO2_WINDOW",
     "NEXUS_SLO2_BOUND",
+    "TOKEN_TIGHT_SLO_MAX",
     "ClaimResult",
+    "claim_token_length_awareness",
     "claim_scaleout_dispatch",
     "claim_p2c_dispatch",
     "claim_homog_pool_parity",
@@ -149,6 +151,10 @@ FAULT_DOMINANCE_SLACK = 0.03  # orloj >= baseline - slack at each level
 # seed-mean nexus-over-orloj gap (observed max +0.035 at scale 2.25).
 NEXUS_SLO2_WINDOW = (1.75, 2.25)
 NEXUS_SLO2_BOUND = 0.06
+# Token-mode tightness boundary (tokens grids, DESIGN.md §12): TPOT
+# scales strictly below it are "tight" — the regime where admission that
+# knows the output-length distributions must beat length-blind FCFS.
+TOKEN_TIGHT_SLO_MAX = 1.75
 
 
 @dataclasses.dataclass(frozen=True)
@@ -746,6 +752,49 @@ def claim_graceful_degradation(
     )
 
 
+def claim_token_length_awareness(
+    results: Sequence[ExperimentResult], max_slo: float = TOKEN_TIGHT_SLO_MAX
+) -> ClaimResult:
+    """Token-mode ordering (DESIGN.md §12): under tight TPOT SLOs,
+    admission driven by the learned output-length distributions
+    (``token_orloj``: shortest-expected-first with per-step conditional
+    remaining-length feasibility and early dropping) finishes at least as
+    many requests as length-blind FCFS continuous batching
+    (``token_fcfs``) — strict, no tolerance, per token case and tight
+    scale, seed-averaged.  The token-mode analogue of
+    ``tight-slo-dominance``: knowing the length distribution is what buys
+    predictability when per-request work is hidden until EOS."""
+    desc = (
+        f"token_orloj's seed-mean finish rate >= token_fcfs's on each "
+        f"tokens case at TPOT scale < {max_slo:g}"
+    )
+    means = _seed_means(results)
+    by_cell: dict[tuple[str, float], dict[str, float]] = defaultdict(dict)
+    for (case, family, slo, system), fr in means.items():
+        if family == "tokens" and slo < max_slo:
+            by_cell[(case, slo)][system] = fr
+    cells, worst = [], float("inf")
+    for (case, slo), per_sys in sorted(by_cell.items()):
+        if "token_orloj" not in per_sys or "token_fcfs" not in per_sys:
+            continue
+        aware, blind = per_sys["token_orloj"], per_sys["token_fcfs"]
+        margin = aware - blind
+        worst = min(worst, margin)
+        cells.append(
+            f"{case}@slo{slo:g}: token_orloj {aware:.3f} vs token_fcfs "
+            f"{blind:.3f} ({margin:+.3f})"
+        )
+    if not cells:
+        return _fail(
+            "token-length-awareness",
+            desc,
+            "no tokens cells pairing token_orloj with token_fcfs at tight TPOT",
+        )
+    return ClaimResult(
+        "token-length-awareness", desc, worst >= 0.0, worst, tuple(cells)
+    )
+
+
 def claim_nexus_slo2_gap(
     results: Sequence[ExperimentResult],
     window: tuple[float, float] = NEXUS_SLO2_WINDOW,
@@ -837,6 +886,16 @@ def evaluate_claims(
             )
     if any({"orloj", "nexus"} <= s for s in slo2_systems.values()):
         claims.append(claim_nexus_slo2_gap(results))
+    # Token-mode ordering (tokens grids): stated when eligible tight-TPOT
+    # cells pair the length-aware scheduler with length-blind FCFS.
+    token_systems: dict[tuple, set] = defaultdict(set)
+    for r in eligible:
+        if r.spec.workload == "tokens" and r.spec.slo_scale < TOKEN_TIGHT_SLO_MAX:
+            token_systems[(_case_label(r.spec), r.spec.slo_scale)].add(
+                r.spec.system
+            )
+    if any({"token_orloj", "token_fcfs"} <= s for s in token_systems.values()):
+        claims.append(claim_token_length_awareness(results))
     # Dispatch-ordering claims need flat pool cells with the compared
     # policies; grids without them (tiny, the legacy table sweeps, the
     # fleet grids) simply don't state them rather than failing on

@@ -135,11 +135,14 @@ def _scaleout_cells() -> list[ExperimentSpec]:
 
 def small() -> list[ExperimentSpec]:
     """The CI conformance grid: 3 cases x 3 SLOs x 5 seeds x 5 systems at
-    n=300 (~1 min serial), plus the scale-out pool cells.  This is the
-    grid the acceptance gate runs on."""
+    n=300 (~1 min serial), plus the scale-out pool cells and the
+    token-mode conformance cells (:func:`tokens` — the
+    token-length-awareness claim rides in the same acceptance artifact).
+    This is the grid the acceptance gate runs on."""
     return (
         _conformance(_SMALL_CASES, _SMALL_SLOS, _SMALL_SEEDS, n_requests=300)
         + _scaleout_cells()
+        + tokens()
     )
 
 
@@ -441,6 +444,77 @@ def chaos_smoke() -> list[ExperimentSpec]:
     )
 
 
+# --------------------------------------------------------------------------
+# Token-mode grids (DESIGN.md §12): continuous-batching decode cells.
+# ``slo_scale`` is the TPOT tightness axis (tpot = scale × one
+# reference-batch step time); systems are the token schedulers
+# (length-aware ``token_orloj`` vs length-blind ``token_fcfs``), feeding
+# the ``token-length-awareness`` claim, with scalar/array paired cells
+# extending ``array-scalar-equivalence`` to resumable decode runs.
+
+_TOKEN_SYSTEMS = ("token_orloj", "token_fcfs")
+
+
+def _token_cells(
+    slos: Sequence[float],
+    seeds: Sequence[int],
+    n_requests: int,
+    engines: Sequence[str] = ("scalar",),
+    utilization: float = 0.85,
+) -> list[ExperimentSpec]:
+    return [
+        ExperimentSpec(
+            workload="tokens",
+            workload_params={"short_mean": 8.0, "long_mean": 64.0},
+            slo_scale=slo,
+            utilization=utilization,
+            n_requests=n_requests,
+            seed=seed,
+            system=system,
+            engine=engine,
+            lm_c0=2.0,  # decode-step cost model: 2 + 0.25·k ms per step
+            lm_c1=0.25,
+            tag=f"tokens/slo{slo:g}/{system}/s{seed}/{engine}",
+        )
+        for slo in slos
+        for seed in seeds
+        for system in _TOKEN_SYSTEMS
+        for engine in engines
+    ]
+
+
+def tokens() -> list[ExperimentSpec]:
+    """The token-mode conformance grid: tight TPOT scales (1.25, 1.5) for
+    the length-awareness ordering plus a loose anchor (3.0) for
+    monotonicity, 5 seeds, both token systems; plus scalar/array paired
+    cells extending the equivalence claim to decode.  The equivalence
+    pairs run at a distinct utilization so their case label never
+    seed-averages into the ordering sweep's cells."""
+    return _token_cells(
+        slos=(1.25, 1.5, 3.0), seeds=_SMALL_SEEDS, n_requests=300
+    ) + _token_cells(
+        slos=(1.25,),
+        seeds=(13,),
+        n_requests=300,
+        engines=("scalar", "array"),
+        utilization=0.9,
+    )
+
+
+def tokens_smoke() -> list[ExperimentSpec]:
+    """Trimmed CI tier of :func:`tokens`: two seeds at a tight and a loose
+    TPOT scale plus one scalar/array equivalence pair (~seconds)."""
+    return _token_cells(
+        slos=(1.25, 3.0), seeds=(7, 11), n_requests=200
+    ) + _token_cells(
+        slos=(1.25,),
+        seeds=(13,),
+        n_requests=200,
+        engines=("scalar", "array"),
+        utilization=0.9,
+    )
+
+
 def slo2_bimodal() -> list[ExperimentSpec]:
     """Diagnostic grid for the intermediate-SLO regime (DESIGN.md §7):
     bimodal at SLO scales around 2 x P99, ORLOJ vs Nexus, 5 seeds.
@@ -473,6 +547,8 @@ GRIDS = {
     "chaos": chaos,
     "chaos-smoke": chaos_smoke,
     "slo2-bimodal": slo2_bimodal,
+    "tokens": tokens,
+    "tokens-smoke": tokens_smoke,
 }
 
 

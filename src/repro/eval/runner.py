@@ -39,9 +39,19 @@ from ..core import (
     Worker,
     run_event_loop,
 )
-from ..core.eventloop import Executor, SimResult
+from ..core.eventloop import DecodeModelExecutor, Executor, SimResult
+from ..core.tokensched import (
+    FcfsTokenScheduler,
+    LengthAwareTokenScheduler,
+    TokenSchedConfig,
+)
 from ..serving.faults import FaultPlan
-from ..serving.trace import RequestSet, TraceConfig, generate_requests
+from ..serving.trace import (
+    RequestSet,
+    TraceConfig,
+    generate_requests,
+    generate_token_requests,
+)
 from .spec import ExperimentResult, ExperimentSpec
 from .workloads import build_workload
 
@@ -50,6 +60,8 @@ __all__ = [
     "run_specs",
     "write_artifact",
     "read_artifact",
+    "token_sched_config",
+    "generate_token_set",
     "DEFAULT_ARTIFACT",
 ]
 
@@ -117,12 +129,39 @@ def _build_pool(
     return workers
 
 
+def _token_metrics(reqs: Sequence) -> dict:
+    """TTFT/TPOT quantiles + token throughput from a replayed token-mode
+    request list (``first_token``/``tokens_done`` are object state written
+    identically by both engines, so these fold bit-identically)."""
+    ttfts: list[float] = []
+    tpots: list[float] = []
+    n_tok = 0
+    for r in reqs:
+        n_tok += r.tokens_done
+        if r.first_token is not None:
+            ttfts.append(r.first_token - r.release)
+        if r.finished is not None and r.tokens_done > 1:
+            tpots.append((r.finished - r.first_token) / (r.tokens_done - 1))
+
+    def q(xs: list[float], p: float) -> float:
+        return float(np.quantile(np.asarray(xs), p)) if xs else 0.0
+
+    return dict(
+        ttft_p50_ms=q(ttfts, 0.5),
+        ttft_p99_ms=q(ttfts, 0.99),
+        tpot_p50_ms=q(tpots, 0.5),
+        tpot_p99_ms=q(tpots, 0.99),
+        n_tokens_out=n_tok,
+    )
+
+
 def _fold_result(
     spec: ExperimentSpec,
     rs: RequestSet,
     res: SimResult,
     wall_s: float,
     substrate_meta: dict | None = None,
+    token_metrics: dict | None = None,
 ) -> ExperimentResult:
     """Fold one replay's :class:`~repro.core.eventloop.SimResult` into the
     :class:`ExperimentResult` schema — the single mapping both substrates
@@ -150,12 +189,112 @@ def _fold_result(
         sched_us_per_request=res.sched_us_per_request,
         wall_s=wall_s,
         substrate_meta=substrate_meta or {},
+        **(token_metrics or {}),
+    )
+
+
+def token_sched_config(spec: ExperimentSpec) -> TokenSchedConfig:
+    """The spec's token-mode scheduler config (DESIGN.md §12).  The
+    spec's Eq.-3 constants double as the decode-step cost model
+    (``d0 + d1·k`` per step) and ``slo_scale`` is the TPOT tightness
+    axis: ``tpot = slo_scale × (d0 + d1·reference_batch)`` — scale 1
+    means "exactly one reference-batch step per token", so scales just
+    above 1 bind hard and large scales are loose.  TTFT rides along at
+    ``ttft_mult`` TPOTs."""
+    p = spec.workload_params
+    d0, d1 = spec.lm_c0, spec.lm_c1
+    k_ref = int(p.get("reference_batch", 8))
+    tpot = spec.slo_scale * (d0 + d1 * k_ref)
+    return TokenSchedConfig(
+        max_batch=int(p.get("max_batch", 16)),
+        ttft_slo_ms=float(p.get("ttft_mult", 8.0)) * tpot,
+        tpot_slo_ms=tpot,
+        d0=d0,
+        d1=d1,
+        prefill_per_token=float(p.get("prefill_per_token", 0.02)),
+    )
+
+
+def generate_token_set(spec: ExperimentSpec) -> RequestSet:
+    """Regenerate a ``tokens`` spec's seeded request set (bit-for-bit,
+    same replay-fairness contract as :func:`generate_requests`)."""
+    cfg = token_sched_config(spec)
+    apps = build_workload(spec.workload, spec.workload_params, spec.time_scale)
+    return generate_token_requests(
+        apps,
+        d0=cfg.d0,
+        d1=cfg.d1,
+        prefill_per_token=cfg.prefill_per_token,
+        ttft_slo_ms=cfg.ttft_slo_ms,
+        tpot_slo_ms=cfg.tpot_slo_ms,
+        cfg=TraceConfig(
+            n_requests=spec.n_requests,
+            utilization=spec.utilization,
+            reference_batch=int(spec.workload_params.get("reference_batch", 8)),
+            seed=spec.seed,
+            tick_ms=spec.tick_ms,
+        ),
+    )
+
+
+def _run_token_spec(spec: ExperimentSpec) -> ExperimentResult:
+    """Replay one ``tokens`` cell: a token scheduler driving resumable
+    decode batches through the event loop (DESIGN.md §12).  Token cells
+    are sim-substrate, single-worker, fault-free by construction — the
+    real-engine decode path is exercised by ``ServingEngine.serve_tokens``
+    under the slow test tier, not by grid cells."""
+    if spec.substrate != "sim":
+        raise ValueError(
+            "tokens cells run on the sim substrate only; the real decode "
+            "path is ServingEngine.serve_tokens (slow test tier)"
+        )
+    if spec.n_workers != 1 or spec.n_pools != 1:
+        raise ValueError(
+            "tokens cells are single-worker: one continuous batch per "
+            "replica is the unit the token schedulers reason about"
+        )
+    if spec.faults:
+        raise ValueError("decode (token-level) cells do not support fault plans")
+    if spec.sched_cfg:
+        raise ValueError(
+            "tokens cells configure schedulers via workload_params "
+            "(max_batch, ttft_mult, ...), not sched_cfg"
+        )
+    t_wall = time.perf_counter()  # simlint: ignore[R1] -- wall_time_s metadata column; the replay itself is virtual-time
+    cfg = token_sched_config(spec)
+    rs = generate_token_set(spec)
+    if spec.system == "token_orloj":
+        sched = LengthAwareTokenScheduler(
+            cfg, initial_len_dists=rs.initial_dists(n_bins=cfg.n_bins)
+        )
+    elif spec.system == "token_fcfs":
+        sched = FcfsTokenScheduler(cfg)
+    else:
+        raise ValueError(
+            f"unknown token system {spec.system!r}; "
+            f"known: ['token_fcfs', 'token_orloj']"
+        )
+    reqs = rs.fresh()
+    res = run_event_loop(
+        reqs,
+        [Worker(sched, DecodeModelExecutor(cfg.d0, cfg.d1, cfg.prefill_per_token))],
+        charge_scheduler_overhead=spec.charge_overhead,
+        seed=spec.seed if spec.loop_seed is None else spec.loop_seed,
+        engine=spec.engine,
+        wall_budget_s=spec.wall_budget_s,
+    )
+    return _fold_result(
+        spec, rs, res,
+        time.perf_counter() - t_wall,  # simlint: ignore[R1] -- wall_s metadata column; the replay itself is virtual-time
+        token_metrics=_token_metrics(reqs),
     )
 
 
 def run_spec(spec: ExperimentSpec) -> ExperimentResult:
     """Regenerate the spec's seeded request set and replay it once (on the
     spec's substrate)."""
+    if spec.workload == "tokens":
+        return _run_token_spec(spec)
     if spec.substrate != "sim":
         # Deferred import: the engine substrate pulls in the JAX model
         # stack only when an engine cell actually runs, so sim-only

@@ -147,6 +147,16 @@ class ExperimentResult:
     # True when the replay was cut off at ``spec.wall_budget_s`` — partial
     # outcome fields; ordering claims exclude truncated cells.
     truncated: bool = False
+    # Token-mode outcome fields (DESIGN.md §12; zero for atomic-batch
+    # cells, defaulted so pre-token artifacts still parse).  TTFT is
+    # first-token-time minus release; TPOT the per-token rate of the
+    # remaining decode (finish − first_token)/(tokens − 1), both over
+    # finished requests only.
+    ttft_p50_ms: float = 0.0
+    ttft_p99_ms: float = 0.0
+    tpot_p50_ms: float = 0.0
+    tpot_p99_ms: float = 0.0
+    n_tokens_out: int = 0
     # Engine-substrate provenance (empty for sim cells): registry model,
     # profiled Eq.-3 constants, predicted-vs-measured batch-time drift, the
     # sim-twin comparison and the finish set (repro.eval.substrate).

@@ -53,17 +53,45 @@ def _real(params: Mapping) -> list[AppWorkload]:
     return real_task(params["name"])
 
 
+def _tokens(params: Mapping) -> list[AppWorkload]:
+    """Token-mode family (DESIGN.md §12): the samplers draw *output
+    lengths in tokens* (geometric, the memoryless EOS model), not
+    alone-times in ms — :func:`repro.serving.trace.generate_token_requests`
+    interprets them accordingly.  Bimodal by default: a short-form app
+    (chat-style) and a long-form app (summarization-style)."""
+
+    def geometric(mean: float) -> Callable[[np.random.Generator, int], np.ndarray]:
+        p = 1.0 / max(mean, 1.0)
+
+        def f(rng: np.random.Generator, n: int) -> np.ndarray:
+            return rng.geometric(p, size=n).astype(np.float64)
+
+        return f
+
+    w_short = float(params.get("short_weight", 0.5))
+    return [
+        AppWorkload("short", geometric(float(params.get("short_mean", 8.0))), w_short),
+        AppWorkload(
+            "long", geometric(float(params.get("long_mean", 64.0))), 1.0 - w_short
+        ),
+    ]
+
+
 FAMILIES: dict[str, Callable[[Mapping], list[AppWorkload]]] = {
     "bimodal": _bimodal,
     "unequal_bimodal": _unequal_bimodal,
     "k_modal": _k_modal,
     "static": _static,
     "real": _real,
+    "tokens": _tokens,
 }
 
 # Families with data-dependent execution-time variance — the regime where
 # the paper claims dominance under tight SLOs; ``static`` is the
-# no-variance control where parity is the claim (Tables 2–5).
+# no-variance control where parity is the claim (Tables 2–5).  ``tokens``
+# is deliberately absent: token cells compare token schedulers against
+# each other (claim ``token-length-awareness``), never against the
+# atomic-batch systems the paper orderings are about.
 DYNAMIC_FAMILIES = frozenset({"bimodal", "unequal_bimodal", "k_modal", "real"})
 
 

@@ -8,6 +8,11 @@ HBM→VMEM; the group matmul feeds the MXU).
 
 ``valid_len`` masks unwritten cache slots (the serving engine's ring
 buffer / partially-filled cache).
+
+Cache lengths need not be multiples of ``block_k``: the block size is
+rounded down to the largest divisor of ``S`` not exceeding the requested
+one, so any cache length is served (at reduced streaming efficiency when
+``S`` has no large divisor — keep caches multiples of 128 for the MXU).
 """
 
 from __future__ import annotations
@@ -79,15 +84,27 @@ def decode_attention_pallas(
     valid_len: jax.Array,
     *,
     block_k: int = 256,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ) -> jax.Array:
-    """q: (B, H, hd); k/v_cache: (B, KV, S, hd); valid_len: (B,) int32."""
+    """q: (B, H, hd); k/v_cache: (B, KV, S, hd); valid_len: (B,) int32.
+
+    ``interpret=None`` (default) auto-detects: compiled on TPU, Pallas
+    interpreter elsewhere.  Pass True/False to force either mode (tests
+    pin the interpreter for determinism off-accelerator)."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
     b, h, hd = q.shape
     kv, s = k_cache.shape[1], k_cache.shape[2]
     assert h % kv == 0
     g = h // kv
+    if s <= 0:
+        raise ValueError(f"cache length must be positive, got S={s}")
     block_k = min(block_k, s)
-    assert s % block_k == 0
+    # Largest divisor of S not exceeding the requested block size: keeps
+    # the grid exact (no partially-out-of-bounds cache tiles) for caches
+    # whose length is not a multiple of block_k, e.g. S=300 @ bk=256.
+    while s % block_k:
+        block_k -= 1
     n_k = s // block_k
     qg = q.reshape(b, kv, g, hd)
     valid2d = valid_len.reshape(b, 1).astype(jnp.int32)

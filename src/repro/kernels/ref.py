@@ -54,7 +54,9 @@ def decode_attention_ref(
     scores = scores / np.sqrt(hd)
     valid = jnp.arange(s)[None] < valid_len[:, None]  # (B, S)
     scores = jnp.where(valid[:, None, None], scores, -1e30)
-    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    probs = jax.nn.softmax(scores, axis=-1)
+    # empty cache rows (valid_len == 0) → zero output (not uniform/NaN)
+    probs = jnp.where(valid[:, None, None], probs, 0.0).astype(q.dtype)
     out = jnp.einsum("bkgt,bktd->bkgd", probs, v_cache)
     return out.reshape(b, h, hd)
 

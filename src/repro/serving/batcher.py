@@ -29,6 +29,11 @@ def padded_batch_size(k: int, batch_sizes: Sequence[int]) -> int:
     """The batch size actually executed for ``k`` requests: the next
     supported size (XLA static-shape regime; batch-size buckets as in
     Clockwork), or ``k`` itself beyond the largest supported size."""
+    if not batch_sizes:
+        raise ValueError(
+            "batch_sizes is empty: the engine needs at least one supported "
+            "batch size to execute anything"
+        )
     for bs in batch_sizes:
         if k <= bs:
             return bs
@@ -43,6 +48,11 @@ def bucket_for(length: int, buckets: tuple[int, ...], *, clamp: bool = True) -> 
     truncated to fit) and raises otherwise."""
     if length < 0:
         raise ValueError(f"negative sequence length {length}")
+    if not buckets:
+        raise ValueError(
+            "buckets is empty: the engine needs at least one sequence-length "
+            "bucket to pad into"
+        )
     for b in buckets:
         if length <= b:
             return b
@@ -75,6 +85,16 @@ def make_padded_batch(
     """
     if overflow not in ("error", "clamp"):
         raise ValueError(f"overflow must be 'error' or 'clamp', got {overflow!r}")
+    if not requests:
+        raise ValueError(
+            "cannot build a padded batch from an empty request list: "
+            "callers must not dispatch empty batches"
+        )
+    if not buckets:
+        raise ValueError(
+            "buckets is empty: the engine needs at least one sequence-length "
+            "bucket to pad into"
+        )
     lengths = np.array([len(r.payload) for r in requests], np.int32)
     max_bucket = buckets[-1]
     if overflow == "error" and int(lengths.max()) > max_bucket:

@@ -26,11 +26,11 @@ from ..core.eventloop import SimResult, Worker, run_event_loop, simulate
 from ..core.request import Request
 from ..core.scheduler import Batch
 from ..models import Model, ModelConfig
-from .batcher import make_padded_batch, padded_batch_size
+from .batcher import bucket_for, make_padded_batch, padded_batch_size
 from .faults import FaultPlan
 from .trace import offered_rate
 
-__all__ = ["EngineConfig", "JaxExecutor", "ServingEngine"]
+__all__ = ["EngineConfig", "JaxExecutor", "DecodeJaxExecutor", "ServingEngine"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -110,6 +110,198 @@ class JaxExecutor:
         ms, k_pad = self._run(padded.tokens)
         self.measured.append((k_pad, padded.labels_bucket, ms))
         return ms
+
+
+class DecodeJaxExecutor:
+    """Measured decode-step executor for the continuous-batching loop
+    (DESIGN.md §12): one token step of the running batch = one real
+    flash-decode attention call over a ring-buffer KV cache, timed on the
+    actual backend.
+
+    The event loop calls :meth:`step_time` once per token step with the
+    post-join active set.  The executor keeps a fixed-capacity cache
+    ``(max_batch, n_kv_heads, max_cache, head_dim)`` plus per-slot
+    ``valid_len``; requests map to slots on join and free them when they
+    leave the active set (EOS — reconciled by ``rid`` diff, so the
+    executor needs no extra callback).  Empty slots ride along with
+    ``valid_len == 0`` (the kernel masks them to zero rows), which keeps
+    the decode shape static — one compiled program for the whole run,
+    exactly how a serving engine runs its decode kernel.
+
+    Per step the measured cost is
+    ``prefill`` (joined prompts through the *prefill executor*'s padded
+    forward — the existing :class:`JaxExecutor` path) ``+ decode`` (the
+    jitted write-KV-then-attend step at full capacity).
+
+    **Honest scope** — what is and is not real here: batch shapes, cache
+    occupancy, masking, and every timed operation are real; the *values*
+    (query vectors, cache contents, prompt token ids) are seeded
+    synthetic — this executor prices the attention decode step, it does
+    not generate text, and it deliberately omits the MLP/sampling cost
+    of a full model step.  On CPU hosts the Pallas kernel only runs
+    under the (very slow) interpreter, so ``use_pallas=None`` follows
+    the kernel-level auto-detect: compiled Pallas on TPU, the jnp
+    reference oracle elsewhere — the same numerics, honestly timed on
+    what the host can actually run.  Prompts longer than the largest
+    prefill bucket are served but their cache entry is truncated to
+    ``max_cache`` (a ring buffer keeps the most recent positions)."""
+
+    def __init__(
+        self,
+        model_cfg: ModelConfig,
+        *,
+        max_batch: int = 8,
+        max_cache: int = 256,
+        prefill: JaxExecutor | None = None,
+        use_pallas: bool | None = None,
+        block_k: int = 256,
+        seed: int = 0,
+    ):
+        if max_batch <= 0 or max_cache <= 0:
+            raise ValueError(
+                f"max_batch and max_cache must be positive, got "
+                f"{max_batch} and {max_cache}"
+            )
+        self.max_batch = max_batch
+        self.max_cache = max_cache
+        self.n_heads = model_cfg.n_heads
+        self.n_kv = model_cfg.n_kv_heads
+        self.head_dim = model_cfg.head_dim or model_cfg.d_model // model_cfg.n_heads
+        self.prefill = prefill
+        self.use_pallas = (
+            jax.default_backend() == "tpu" if use_pallas is None else use_pallas
+        )
+        self.block_k = block_k
+        self._rng = np.random.default_rng(seed)
+        self._slot: dict[int, int] = {}  # rid -> cache slot
+        self._free = list(range(max_batch - 1, -1, -1))
+        shape = (max_batch, self.n_kv, max_cache, self.head_dim)
+        self._kc = jnp.zeros(shape, jnp.float32)
+        self._vc = jnp.zeros(shape, jnp.float32)
+        self._valid = jnp.zeros((max_batch,), jnp.int32)
+        self._step = jax.jit(
+            self._step_impl, static_argnames=("use_pallas", "block_k")
+        )
+        # Warm the compile cache so the first measured step is not a
+        # compile (mirrors JaxExecutor._run's warm-up discipline).
+        self._decode_once()
+
+    # ------------------------------------------------------------ internals
+    @staticmethod
+    def _step_impl(kc, vc, valid, active, q, nk, nv, *, use_pallas, block_k):
+        """Write this step's K/V at each active slot's ring position,
+        advance ``valid_len``, attend.  Inactive slots pass through
+        untouched and attend over zero valid positions."""
+        from ..kernels.ops import decode_attention
+
+        s = kc.shape[2]
+        pos = valid % s
+
+        def write(cache, new):
+            return jax.vmap(
+                lambda c, n, p: jax.lax.dynamic_update_slice(
+                    c, n[:, None, :], (0, p, 0)
+                )
+            )(cache, new, pos)
+
+        sel = active[:, None, None, None]
+        kc2 = jnp.where(sel, write(kc, nk), kc)
+        vc2 = jnp.where(sel, write(vc, nv), vc)
+        valid2 = jnp.where(active, jnp.minimum(valid + 1, s), valid)
+        out = decode_attention(
+            q, kc2, vc2, valid2, use_pallas=use_pallas, block_k=block_k
+        )
+        return kc2, vc2, valid2, out
+
+    def _decode_once(self) -> float:
+        """One measured decode step at full capacity (ms); mutates the
+        cache state of the active slots."""
+        b, h, hd = self.max_batch, self.n_heads, self.head_dim
+        # Synthetic values are drawn OUTSIDE the timed region: the
+        # measurement prices the kernel step, not host-side rng.
+        q = jnp.asarray(self._rng.standard_normal((b, h, hd)), jnp.float32)
+        nk = jnp.asarray(
+            self._rng.standard_normal((b, self.n_kv, hd)), jnp.float32
+        )
+        nv = jnp.asarray(
+            self._rng.standard_normal((b, self.n_kv, hd)), jnp.float32
+        )
+        active = self._valid > 0  # slots currently holding a request
+        t0 = time.perf_counter()  # simlint: ignore[R1] -- real decode-step latency measurement
+        kc, vc, valid, out = self._step(
+            self._kc, self._vc, self._valid, active, q, nk, nv,
+            use_pallas=self.use_pallas, block_k=self.block_k,
+        )
+        jax.block_until_ready(out)
+        ms = (time.perf_counter() - t0) * 1e3  # simlint: ignore[R1] -- real decode-step latency measurement
+        self._kc, self._vc, self._valid = kc, vc, valid
+        # (B, H, hd) attention output of the last step — synthetic-valued,
+        # kept for kernel-integration tests and debugging.
+        self.last_out = out
+        return ms
+
+    def _prefill_ms(self, joined: Sequence[Request]) -> float:
+        """Price the joined prompts through the padded prefill forward and
+        seed their cache slots.  Without a prefill executor the forward is
+        skipped (decode-only pricing) but slots are still seeded."""
+        ms = 0.0
+        lens = [max(int(r.prompt_tokens), 1) for r in joined]
+        if self.prefill is not None:
+            bucket = bucket_for(
+                min(max(lens), max(self.prefill.cfg.buckets)),
+                self.prefill.cfg.buckets,
+            )
+            toks = np.zeros((len(joined), bucket), np.int32)
+            for i, l in enumerate(lens):
+                n_tok = min(l, bucket)
+                toks[i, :n_tok] = self._rng.integers(1, 1000, size=n_tok)
+            ms, _ = self.prefill._run(toks)
+        for r, l in zip(joined, lens):
+            if not self._free:
+                raise RuntimeError(
+                    f"decode executor capacity exceeded: {len(self._slot)} "
+                    f"active slots of {self.max_batch}; the token scheduler "
+                    f"must admit at most max_batch concurrent requests"
+                )
+            slot = self._free.pop()
+            self._slot[r.rid] = slot
+            n_ctx = min(l, self.max_cache)
+            kv = self._rng.standard_normal(
+                (2, self.n_kv, n_ctx, self.head_dim)
+            ).astype(np.float32)
+            self._kc = self._kc.at[slot, :, :n_ctx, :].set(kv[0])
+            self._vc = self._vc.at[slot, :, :n_ctx, :].set(kv[1])
+            self._valid = self._valid.at[slot].set(n_ctx)
+        return ms
+
+    def _release_departed(self, active: Sequence[Request]) -> None:
+        live = {r.rid for r in active}
+        for rid in [r for r in self._slot if r not in live]:
+            slot = self._slot.pop(rid)
+            self._valid = self._valid.at[slot].set(0)
+            self._free.append(slot)
+
+    # ------------------------------------------------------------- API
+    def calibrate(self, reps: int = 3) -> float:
+        """Median measured decode-step ms at *full* batch capacity — the
+        request-generation rate anchor (cache state is restored)."""
+        kc, vc, valid = self._kc, self._vc, self._valid
+        self._valid = jnp.full((self.max_batch,), self.max_cache, jnp.int32)
+        ts = [self._decode_once() for _ in range(reps)]
+        self._kc, self._vc, self._valid = kc, vc, valid
+        return float(np.median(ts))
+
+    def step_time(
+        self, active: Sequence[Request], joined: Sequence[Request], now: float
+    ) -> float:
+        """Measured ms for one token step: joined prompts' prefill plus
+        the full-capacity decode attention step."""
+        if not active:
+            raise ValueError("step_time called with an empty active set")
+        # Departures first (frees slots), then joins (claims them).
+        self._release_departed(active)
+        ms = self._prefill_ms(joined) if joined else 0.0
+        return ms + self._decode_once()
 
 
 @dataclasses.dataclass
@@ -237,7 +429,88 @@ class ServingEngine:
         }
         return reqs, hist
 
+    def decode_executor(
+        self,
+        *,
+        max_batch: int = 8,
+        max_cache: int = 256,
+        use_pallas: bool | None = None,
+        seed: int | None = None,
+    ) -> DecodeJaxExecutor:
+        """Build a :class:`DecodeJaxExecutor` over this engine's model
+        dims, wired to the shared measured prefill executor."""
+        return DecodeJaxExecutor(
+            self.model.cfg,
+            max_batch=max_batch,
+            max_cache=max_cache,
+            prefill=self.executor,
+            use_pallas=use_pallas,
+            seed=self.seed if seed is None else seed,
+        )
+
+    def make_token_requests(
+        self,
+        n: int,
+        decode: DecodeJaxExecutor,
+        *,
+        mean_out: float = 24.0,
+        tpot_scale: float = 2.0,
+        ttft_mult: float = 8.0,
+        utilization: float = 0.7,
+        prompt_lo: int = 16,
+        prompt_hi: int = 128,
+        seed: int = 0,
+    ) -> list[Request]:
+        """Token-mode requests anchored to the *measured* decode step:
+        geometric output lengths (mean ``mean_out``), uniform prompts,
+        TPOT SLO = ``tpot_scale`` × the calibrated full-batch step time,
+        TTFT = ``ttft_mult`` × TPOT, arrival rate offering
+        ``utilization`` of a worker continuously batching at capacity —
+        the engine-substrate analogue of
+        :func:`repro.serving.trace.generate_token_requests`."""
+        step_ms = decode.calibrate()
+        tpot = tpot_scale * step_ms
+        ttft = ttft_mult * tpot
+        rng = np.random.default_rng(seed)
+        out = np.maximum(rng.geometric(1.0 / mean_out, size=n), 1)
+        prompts = rng.integers(prompt_lo, prompt_hi + 1, size=n)
+        rate = utilization * decode.max_batch / (step_ms * mean_out)
+        arrivals = np.cumsum(rng.exponential(1.0 / rate, size=n))
+        return [
+            Request(
+                app_id="tok",
+                release=float(t),
+                slo=ttft + tpot * (float(o) - 1.0),
+                true_time=float(o) * step_ms,
+                prompt_tokens=int(p),
+                out_tokens=int(o),
+            )
+            for t, o, p in zip(arrivals, out, prompts)
+        ]
+
     # ------------------------------------------------------------- run
+    def serve_tokens(
+        self,
+        requests: Sequence[Request],
+        scheduler,
+        decode: DecodeJaxExecutor,
+        *,
+        engine: str = "scalar",
+    ) -> SimResult:
+        """Serve a token-mode request set through the continuous-batching
+        loop with measured decode steps (DESIGN.md §12).  The scheduler
+        must be a token scheduler (``repro.core.tokensched``) whose
+        ``max_batch`` does not exceed the executor's slot capacity."""
+        cap = getattr(getattr(scheduler, "cfg", None), "max_batch", None)
+        if cap is not None and cap > decode.max_batch:
+            raise ValueError(
+                f"scheduler admits up to {cap} concurrent requests but the "
+                f"decode executor has only {decode.max_batch} cache slots"
+            )
+        return run_event_loop(
+            list(requests), [Worker(scheduler, decode)], engine=engine
+        )
+
     def serve(self, requests: Sequence[Request], scheduler) -> SimResult:
         faults = None
         if self.cfg.batch_timeout_ms > 0.0:

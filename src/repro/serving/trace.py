@@ -23,6 +23,7 @@ __all__ = [
     "TraceConfig",
     "azure_like_arrivals",
     "generate_requests",
+    "generate_token_requests",
     "offered_rate",
     "sample_alone_times",
     "RequestSet",
@@ -129,6 +130,8 @@ class RequestSet:
                 cost=r.cost,
                 extra_deadlines=r.extra_deadlines,
                 payload=r.payload,
+                prompt_tokens=r.prompt_tokens,
+                out_tokens=r.out_tokens,
             )
             for r in self.requests
         ]
@@ -151,7 +154,16 @@ class RequestSet:
         must reproduce this exactly — the §5.2 same-request-set fairness
         premise, enforced by the replay-fairness regression test."""
         per_req = tuple(
-            (r.app_id, r.release, r.slo, r.true_time, r.cost, r.extra_deadlines)
+            (
+                r.app_id,
+                r.release,
+                r.slo,
+                r.true_time,
+                r.cost,
+                r.extra_deadlines,
+                r.prompt_tokens,
+                r.out_tokens,
+            )
             for r in self.requests
         )
         history = tuple(
@@ -212,6 +224,70 @@ def generate_requests(
             a.sample(rng, history_per_app) - latency_model.c0, 0.1
         )
         / latency_model.c1
+        for a in apps
+    }
+    return RequestSet(requests=reqs, p99_alone=p99, app_history=history)
+
+
+def generate_token_requests(
+    apps: Sequence[AppWorkload],
+    *,
+    d0: float,
+    d1: float,
+    prefill_per_token: float,
+    ttft_slo_ms: float,
+    tpot_slo_ms: float,
+    prompt_lo: int = 16,
+    prompt_hi: int = 128,
+    cfg: TraceConfig | None = None,
+    history_per_app: int = 512,
+) -> RequestSet:
+    """Generate a token-mode request set (DESIGN.md §12).
+
+    The apps' samplers draw *output lengths in tokens* (the ``tokens``
+    family in :mod:`repro.eval.workloads`), the hidden data-dependent
+    quantity of autoregressive decode.  Each request's SLO is the implied
+    TTFT/TPOT deadline ``ttft + tpot·(out_tokens − 1)`` — derived from the
+    hidden length, so token schedulers never read it (§3.1 partial-
+    information constraint carried over).  ``app_history`` holds warm-up
+    *length* samples, the token-mode analogue of the alone-time history
+    (``RequestSet.initial_dists`` then yields per-app length
+    distributions for the length-aware scheduler, §5.2 fairness).
+
+    Arrival rate: a worker continuously batching at ``reference_batch`` k
+    serves k tokens per ``d0 + d1·k`` ms step, so its request throughput
+    is ``k / ((d0 + d1·k) · E[out])``; ``utilization`` scales that.
+    """
+    cfg = cfg or TraceConfig()
+    rng = np.random.default_rng(cfg.seed)
+    n = cfg.n_requests
+    which, lens = sample_alone_times(apps, rng, n)
+    out = np.maximum(np.rint(lens), 1.0)
+    prompts = rng.integers(prompt_lo, prompt_hi + 1, size=n)
+    # Alone time = own prefill + solo decode; p99 of it anchors reporting
+    # (token-mode SLOs come from TTFT/TPOT, not from slo_scale × p99).
+    alone = prefill_per_token * prompts + (d0 + d1) * out
+    p99 = float(np.quantile(alone, 0.99))
+
+    k = cfg.reference_batch
+    rate = cfg.utilization * k / ((d0 + d1 * k) * float(out.mean()))
+    arrivals = azure_like_arrivals(rate, n, cfg, rng)
+    if cfg.tick_ms > 0.0:
+        arrivals = np.floor(arrivals / cfg.tick_ms) * cfg.tick_ms
+
+    reqs = [
+        Request(
+            app_id=apps[w].app_id,
+            release=float(at),
+            slo=ttft_slo_ms + tpot_slo_ms * (o - 1.0),
+            true_time=float(al),
+            prompt_tokens=int(p),
+            out_tokens=int(o),
+        )
+        for w, at, o, p, al in zip(which, arrivals, out, prompts, alone)
+    ]
+    history = {
+        a.app_id: np.maximum(np.rint(a.sample(rng, history_per_app)), 1.0)
         for a in apps
     }
     return RequestSet(requests=reqs, p99_alone=p99, app_history=history)

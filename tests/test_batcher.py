@@ -71,6 +71,31 @@ def test_padded_batch_bad_overflow_mode():
         make_padded_batch([_req(4)], BUCKETS, overflow="truncate")
 
 
+# ------------------------------------------------------- empty inputs
+def test_padded_batch_empty_requests_is_explicit_error():
+    """Regression: an empty request list used to die inside numpy with an
+    opaque 'zero-size array to reduction' ValueError."""
+    with pytest.raises(ValueError, match="empty request list"):
+        make_padded_batch([], BUCKETS)
+
+
+def test_padded_batch_empty_buckets_is_explicit_error():
+    with pytest.raises(ValueError, match="buckets is empty"):
+        make_padded_batch([_req(4)], ())
+
+
+def test_bucket_for_empty_buckets_is_explicit_error():
+    """Regression: used to raise IndexError on buckets[-1]."""
+    with pytest.raises(ValueError, match="buckets is empty"):
+        bucket_for(5, ())
+
+
+def test_padded_batch_size_empty_sizes_is_explicit_error():
+    """Regression: silently returned k for empty batch_sizes."""
+    with pytest.raises(ValueError, match="batch_sizes is empty"):
+        padded_batch_size(3, ())
+
+
 # --------------------------------------------------- batch-dim padding
 def test_padded_batch_size_next_supported():
     """Fast-lane coverage of the batch-dimension bucketing the real

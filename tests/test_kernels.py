@@ -106,6 +106,51 @@ def test_decode_attention_shapes(b, h, kv, s, hd, dtype):
     )
 
 
+@pytest.mark.parametrize(
+    "s,block_k",
+    [
+        (300, 256),   # S % bk != 0: bk rounds down to a divisor (150)
+        (96, 64),     # rounds 64 -> 48
+        (7, 256),     # S prime and < bk: degenerates to bk=7
+        (130, 128),   # 130 = 2*5*13: largest divisor <= 128 is 65
+    ],
+)
+def test_decode_attention_nondivisible_cache_length(s, block_k):
+    """Regression: S % block_k != 0 used to trip the divisor assert."""
+    rng = np.random.default_rng(9)
+    b, h, kv, hd = 2, 4, 2, 64
+    q = jnp.asarray(rng.normal(size=(b, h, hd)), jnp.float32)
+    kc = jnp.asarray(rng.normal(size=(b, kv, s, hd)), jnp.float32)
+    vc = jnp.asarray(rng.normal(size=(b, kv, s, hd)), jnp.float32)
+    valid = jnp.asarray(rng.integers(1, s + 1, size=(b,)), jnp.int32)
+    out = decode_attention(q, kc, vc, valid, block_k=block_k)
+    want = ref.decode_attention_ref(q, kc, vc, valid)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(want, np.float32),
+        rtol=2e-5, atol=2e-5,
+    )
+
+
+def test_decode_attention_empty_rows():
+    """valid_len == 0 rows (freshly admitted, cache unwritten) must produce
+    zeros — not NaN from a 0/0 softmax — and must not disturb live rows."""
+    rng = np.random.default_rng(10)
+    b, h, kv, s, hd = 3, 4, 2, 128, 64
+    q = jnp.asarray(rng.normal(size=(b, h, hd)), jnp.float32)
+    kc = jnp.asarray(rng.normal(size=(b, kv, s, hd)), jnp.float32)
+    vc = jnp.asarray(rng.normal(size=(b, kv, s, hd)), jnp.float32)
+    valid = jnp.array([0, 77, 0], jnp.int32)
+    out = decode_attention(q, kc, vc, valid, block_k=64)
+    want = ref.decode_attention_ref(q, kc, vc, valid)
+    assert np.isfinite(np.asarray(out)).all()
+    np.testing.assert_array_equal(np.asarray(out[0]), 0.0)
+    np.testing.assert_array_equal(np.asarray(out[2]), 0.0)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(want, np.float32),
+        rtol=2e-5, atol=2e-5,
+    )
+
+
 def test_decode_attention_matches_flash_last_row():
     """Decoding the last position must equal the last row of full flash."""
     rng = np.random.default_rng(5)

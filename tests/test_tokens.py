@@ -1,0 +1,384 @@
+"""Token-level continuous batching: schedulers, resumable decode through
+both event engines, the length-distribution tail view, the eval tier's
+token cells, and the gated length-awareness claim (DESIGN.md §12)."""
+
+import numpy as np
+import pytest
+
+from repro.core.distributions import EmpiricalDistribution
+from repro.core.eventloop import (
+    DecodeModelExecutor,
+    ModelExecutor,
+    SimResult,
+    Worker,
+    run_event_loop,
+)
+from repro.core.request import Request
+from repro.core.scheduler import Batch
+from repro.core.tokensched import (
+    FcfsTokenScheduler,
+    LengthAwareTokenScheduler,
+    TokenSchedConfig,
+    token_deadline,
+)
+from repro.eval.claims import (
+    TOKEN_TIGHT_SLO_MAX,
+    claim_token_length_awareness,
+)
+from repro.eval.runner import (
+    generate_token_set,
+    run_spec,
+    token_sched_config,
+)
+from repro.eval.spec import ExperimentResult, ExperimentSpec
+
+
+def _token_reqs(n=60, seed=0, mean_out=12.0, rate=0.05, ttft=200.0, tpot=10.0):
+    rng = np.random.default_rng(seed)
+    out = np.maximum(rng.geometric(1.0 / mean_out, size=n), 1)
+    at = np.cumsum(rng.exponential(1.0 / rate, size=n))
+    return [
+        Request(
+            app_id="a",
+            release=float(t),
+            slo=ttft + tpot * (float(o) - 1.0),
+            true_time=float(o),
+            prompt_tokens=int(rng.integers(8, 64)),
+            out_tokens=int(o),
+        )
+        for t, o in zip(at, out)
+    ]
+
+
+# --------------------------------------------------------------------------
+# conditional length tail (the per-step remaining-work view)
+# --------------------------------------------------------------------------
+
+
+def test_expected_remaining_matches_bruteforce_tail():
+    rng = np.random.default_rng(3)
+    xs = rng.uniform(10.0, 50.0, size=4000)
+    d = EmpiricalDistribution.from_samples(xs, n_bins=16)
+    # Uniform(10, 50): E[X - t | X > t] = (50 - t) / 2 exactly.
+    for t in (10.0, 20.0, 35.0, 49.0):
+        assert d.expected_remaining(t) == pytest.approx((50.0 - t) / 2, rel=0.08)
+    # Tail exhausted -> "finishes immediately", not an error.
+    assert d.expected_remaining(60.0) == 0.0
+    # Below the support the conditioning is vacuous.
+    assert d.expected_remaining(0.0) == pytest.approx(d.mean() - 0.0, rel=0.05)
+
+
+def test_conditional_tail_renormalizes():
+    d = EmpiricalDistribution.from_samples(
+        np.linspace(0.0, 100.0, 2000), n_bins=10
+    )
+    tail = d.conditional_tail(50.0)
+    assert tail.mean() == pytest.approx(75.0, rel=0.05)
+    with pytest.raises(ValueError):
+        d.conditional_tail(150.0)
+
+
+def test_token_deadline_shape():
+    cfg = TokenSchedConfig(ttft_slo_ms=100.0, tpot_slo_ms=10.0)
+    assert token_deadline(cfg, 5.0, 1.0) == pytest.approx(105.0)
+    assert token_deadline(cfg, 5.0, 11.0) == pytest.approx(205.0)
+    # Degenerate zero-token request never gets a negative horizon.
+    assert token_deadline(cfg, 5.0, 0.0) == pytest.approx(105.0)
+
+
+# --------------------------------------------------------------------------
+# scheduler unit behaviour
+# --------------------------------------------------------------------------
+
+
+def test_fcfs_admits_in_arrival_order_and_fills_free_slots():
+    cfg = TokenSchedConfig(max_batch=2)
+    s = FcfsTokenScheduler(cfg)
+    reqs = _token_reqs(5)
+    s.on_arrivals(reqs, 0.0)
+    batch, _ = s.next_batch(0.0)
+    assert batch.decode and [r.rid for r in batch.requests] == [
+        reqs[0].rid, reqs[1].rid
+    ]
+    # one slot frees -> exactly the next waiter joins, in order
+    joined = s.on_decode_step([reqs[0]], n_active=1, now=10.0)
+    assert [r.rid for r in joined] == [reqs[2].rid]
+    assert s.on_decode_step([], n_active=2, now=11.0) == []
+    assert s.n_pending == 2
+
+
+def test_token_schedulers_reject_atomic_batch_hook():
+    for s in (FcfsTokenScheduler(), LengthAwareTokenScheduler()):
+        with pytest.raises(TypeError):
+            s.on_batch_done(Batch([], 0), 0.0, [])
+
+
+def test_length_aware_drops_hopeless_and_admits_shortest_first():
+    cfg = TokenSchedConfig(
+        max_batch=4, ttft_slo_ms=50.0, tpot_slo_ms=5.0, d0=2.0, d1=0.5,
+        default_len=10.0, prefill_per_token=0.0,
+    )
+    dists = {
+        "short": EmpiricalDistribution.delta(4.0),
+        "long": EmpiricalDistribution.delta(100.0),
+    }
+    s = LengthAwareTokenScheduler(cfg, initial_len_dists=dists)
+    # long app: even alone, 100 tokens * 2.5ms = 250ms > 50 + 5*99 = 545...
+    # make it hopeless via a late 'now' instead: deadline is anchored at
+    # release, so a stale waiter becomes hopeless as the clock advances.
+    late = Request(app_id="long", release=0.0, slo=1.0, true_time=1.0,
+                   prompt_tokens=1, out_tokens=100)
+    short_b = Request(app_id="short", release=400.0, slo=1.0, true_time=1.0,
+                      prompt_tokens=1, out_tokens=4)
+    short_a = Request(app_id="short", release=400.0, slo=1.0, true_time=1.0,
+                      prompt_tokens=1, out_tokens=4)
+    s.on_arrivals([late, short_b, short_a], 400.0)
+    batch, _ = s.next_batch(400.0)
+    # late is hopeless at now=400 (finish 400+250=650 > 0+50+5*99=545)
+    assert late.dropped == 400.0 and s.n_timed_out == 1
+    # both shorts admitted, rid tiebreak keeps arrival order
+    assert [r.rid for r in batch.requests] == [short_b.rid, short_a.rid]
+
+
+@pytest.mark.parametrize("d1,expect_join", [(0.0, True), (2.0, False)],
+                         ids=["flat_step", "steep_step"])
+def test_length_aware_protects_active_budget(d1, expect_join):
+    """A short candidate that is feasible on its own joins under a flat
+    step-time curve, but is refused when the post-join step time would
+    blow the *active* request's remaining token budget (it stays queued,
+    not dropped).
+
+    Numbers: active app 'a' (delta length 10) released at 0 has decoded 2
+    tokens by now=20, so its implied deadline is 0+40+3.05·9 = 67.45 and
+    its remaining 8 tokens need 8 steps.  At d1=0 a step is 3 ms →
+    20+24 = 44 fits; at d1=2 the k=2 step is 7 ms → 20+56 = 76 blows it.
+    The candidate (delta length 2, released at 20) fits either way:
+    20 + 7·2 = 34 ≤ 20+40+3.05."""
+    cfg = TokenSchedConfig(
+        max_batch=8, ttft_slo_ms=40.0, tpot_slo_ms=3.05, d0=3.0, d1=d1,
+        prefill_per_token=0.0,
+    )
+    dists = {
+        "a": EmpiricalDistribution.delta(10.0),
+        "s": EmpiricalDistribution.delta(2.0),
+    }
+    s = LengthAwareTokenScheduler(cfg, initial_len_dists=dists)
+    active = Request(app_id="a", release=0.0, slo=1.0, true_time=1.0,
+                     prompt_tokens=1, out_tokens=10)
+    active.tokens_done = 2
+    s._active = [active]
+    cand = Request(app_id="s", release=20.0, slo=1.0, true_time=1.0,
+                   prompt_tokens=1, out_tokens=2)
+    s.on_arrival(cand, 20.0)
+    joined = s.on_decode_step([], n_active=1, now=20.0)
+    if expect_join:
+        assert [r.rid for r in joined] == [cand.rid]
+    else:
+        assert joined == []
+        assert s.n_pending == 1 and cand.dropped is None
+
+
+def test_length_aware_learns_from_eos_observations():
+    cfg = TokenSchedConfig(default_len=50.0, rebuild_every=4)
+    s = LengthAwareTokenScheduler(cfg)
+    probe = Request(app_id="a", release=0.0, slo=1.0, true_time=1.0)
+    assert s._expected_len(probe) == pytest.approx(50.0)  # default prior
+    for _ in range(4):
+        done = Request(app_id="a", release=0.0, slo=1.0, true_time=1.0)
+        done.tokens_done = 8
+        s._observe(done)
+    assert s._expected_len(probe) == pytest.approx(8.0, abs=1.0)
+
+
+# --------------------------------------------------------------------------
+# resumable decode through the event loop
+# --------------------------------------------------------------------------
+
+
+def _clone(reqs):
+    return [
+        Request(app_id=r.app_id, release=r.release, slo=r.slo,
+                true_time=r.true_time, prompt_tokens=r.prompt_tokens,
+                out_tokens=r.out_tokens)
+        for r in reqs
+    ]
+
+
+def _run(reqs, mk_sched, engine):
+    return run_event_loop(
+        reqs,
+        [Worker(mk_sched(), DecodeModelExecutor(2.0, 0.25, 0.02))],
+        engine=engine,
+    )
+
+
+@pytest.mark.parametrize("mk_sched", [
+    lambda: FcfsTokenScheduler(TokenSchedConfig(max_batch=4)),
+    lambda: LengthAwareTokenScheduler(
+        TokenSchedConfig(max_batch=4, ttft_slo_ms=80.0, tpot_slo_ms=8.0)
+    ),
+], ids=["fcfs", "length_aware"])
+def test_decode_scalar_array_bit_identical(mk_sched):
+    master = _token_reqs(120, seed=5)
+    runs, clones = {}, {}
+    for engine in ("scalar", "array"):
+        reqs = _clone(master)
+        runs[engine] = _run(reqs, mk_sched, engine)
+        clones[engine] = reqs
+    sc, ar = runs["scalar"], runs["array"]
+    for f in (
+        "n_total", "n_finished_ok", "n_finished_late", "n_dropped",
+        "n_unserved", "n_batches", "n_decisions", "makespan_ms",
+        "worker_busy",
+    ):
+        assert getattr(sc, f) == getattr(ar, f), f
+    for a, b in zip(clones["scalar"], clones["array"]):
+        assert (a.tokens_done, a.first_token, a.started, a.finished,
+                a.dropped) == (
+            b.tokens_done, b.first_token, b.started, b.finished, b.dropped)
+    assert sc.conserved and ar.conserved
+
+
+@pytest.mark.parametrize("engine", ["scalar", "array"])
+def test_decode_serves_every_token_and_stamps_first_token(engine):
+    reqs = _token_reqs(40, seed=2)
+    res = _run(reqs, lambda: FcfsTokenScheduler(TokenSchedConfig(max_batch=4)),
+               engine)
+    assert res.n_finished_ok + res.n_finished_late == 40
+    for r in reqs:
+        assert r.tokens_done == r.out_tokens
+        assert r.first_token is not None and r.first_token <= r.finished
+        # TPOT accounting needs finish strictly after the first token for
+        # multi-token outputs
+        if r.out_tokens > 1:
+            assert r.finished > r.first_token
+
+
+def test_decode_rejects_fault_plans():
+    from repro.serving.faults import FaultPlan
+
+    reqs = _token_reqs(8)
+    with pytest.raises(ValueError, match="fault"):
+        run_event_loop(
+            reqs,
+            [Worker(FcfsTokenScheduler(), DecodeModelExecutor())],
+            faults=FaultPlan(mttf_ms=50.0),
+        )
+
+
+def test_decode_batch_requires_step_time_executor():
+    """An atomic executor (no step_time) meeting a decode batch is a
+    contract violation reported as an actionable TypeError."""
+    from repro.core.distributions import BatchLatencyModel
+
+    reqs = _token_reqs(8)
+    atomic = ModelExecutor(BatchLatencyModel(c0=2.0, c1=0.5))
+    with pytest.raises(TypeError, match="step_time"):
+        run_event_loop(reqs, [Worker(FcfsTokenScheduler(), atomic)])
+    # and the decode executor refuses the atomic path symmetrically
+    with pytest.raises(TypeError):
+        DecodeModelExecutor()(Batch(reqs[:2], 2), 0.0)
+
+
+# --------------------------------------------------------------------------
+# eval tier: token cells, metrics, claim
+# --------------------------------------------------------------------------
+
+
+def _token_spec(**kw):
+    base = dict(
+        workload="tokens",
+        slo_scale=1.5,
+        workload_params={"short_mean": 6.0, "long_mean": 24.0},
+        n_requests=80,
+        seed=3,
+        system="token_fcfs",
+        lm_c0=2.0,
+        lm_c1=0.25,
+        utilization=0.8,
+    )
+    base.update(kw)
+    return ExperimentSpec(**base)
+
+
+def test_token_sched_config_slo_axis():
+    cfg = token_sched_config(_token_spec(slo_scale=2.0))
+    # tpot = slo_scale * (d0 + d1 * reference_batch) = 2 * (2 + 0.25*8)
+    assert cfg.tpot_slo_ms == pytest.approx(8.0)
+    assert cfg.ttft_slo_ms == pytest.approx(64.0)
+    assert cfg.d0 == 2.0 and cfg.d1 == 0.25
+
+
+def test_token_set_regenerates_bit_identical():
+    spec = _token_spec()
+    a, b = generate_token_set(spec), generate_token_set(spec)
+    assert a.fingerprint() == b.fingerprint()
+    assert all(r.out_tokens >= 1 and r.prompt_tokens >= 1 for r in a.requests)
+
+
+def test_run_token_spec_produces_token_metrics_and_is_deterministic():
+    spec = _token_spec()
+    r1, r2 = run_spec(spec), run_spec(spec)
+    assert r1.n_tokens_out > 0
+    assert r1.ttft_p50_ms > 0.0 and r1.tpot_p50_ms > 0.0
+    assert r1.tpot_p99_ms >= r1.tpot_p50_ms
+    assert r1.stable_dict() == r2.stable_dict()
+    # and the aware system runs through the same entry point
+    r3 = run_spec(_token_spec(system="token_orloj"))
+    assert r3.n_tokens_out > 0
+
+
+@pytest.mark.parametrize("kw,match", [
+    (dict(substrate="engine"), "sim substrate"),
+    (dict(n_workers=2), "single-worker"),
+    (dict(faults={"mttf_ms": 10.0}), "fault"),
+    (dict(sched_cfg={"b": 4}), "sched_cfg"),
+    (dict(system="orloj"), "unknown token system"),
+])
+def test_run_token_spec_guards(kw, match):
+    with pytest.raises(ValueError, match=match):
+        run_spec(_token_spec(**kw))
+
+
+def _fake_token_result(system, finish_rate, slo, seed=0):
+    spec = _token_spec(system=system, slo_scale=slo, seed=seed)
+    return ExperimentResult(
+        spec=spec, finish_rate=finish_rate, n_total=80,
+        n_finished_ok=int(80 * finish_rate), n_finished_late=0, n_dropped=0,
+        n_unserved=0, utilization=0.5, makespan_ms=1.0, p99_alone_ms=1.0,
+        latency_p50_ms=1.0, latency_p99_ms=1.0, n_decisions=1,
+        sched_time_ms=0.0, sched_us_per_request=0.0, wall_s=0.0,
+    )
+
+
+def test_token_length_awareness_claim():
+    tight, loose = 1.25, TOKEN_TIGHT_SLO_MAX + 1.0
+    results = [
+        _fake_token_result("token_orloj", 0.9, tight, seed=0),
+        _fake_token_result("token_fcfs", 0.6, tight, seed=0),
+        # loose-SLO cells are out of the claim's domain even when blind wins
+        _fake_token_result("token_orloj", 0.5, loose, seed=0),
+        _fake_token_result("token_fcfs", 0.9, loose, seed=0),
+    ]
+    c = claim_token_length_awareness(results)
+    assert c.passed and c.margin == pytest.approx(0.3)
+    # strict: a single tight-SLO loss fails the claim
+    worse = [
+        _fake_token_result("token_orloj", 0.59, tight, seed=0),
+        _fake_token_result("token_fcfs", 0.6, tight, seed=0),
+    ]
+    assert not claim_token_length_awareness(worse).passed
+    # no eligible cells -> explicit failure, not a vacuous pass
+    assert not claim_token_length_awareness([]).passed
+
+
+def test_token_grids_registered():
+    from repro.eval.grid import GRIDS
+
+    for name in ("tokens", "tokens-smoke"):
+        specs = GRIDS[name]()
+        assert all(s.workload == "tokens" for s in specs)
+        systems = {s.system for s in specs}
+        assert systems == {"token_orloj", "token_fcfs"}
+        # the equivalence pairing needs both engines present
+        assert {s.engine for s in specs} == {"scalar", "array"}
