@@ -515,6 +515,167 @@ def eventloop_faults(full: bool = False,
     })
 
 
+class _FifoModelScheduler:
+    """Object-path FIFO over per-model queues: arrivals bucket by
+    ``model_id``, ``next_batch`` drains the most-backlogged model
+    (deterministic tie-break by model name) and stamps ``Batch.model`` —
+    the minimum a scheduler must do to drive a residency-managed run.
+    As with the fault benchmark, the scheduler is near-free so the
+    measured delta is the residency machinery, not scheduling."""
+
+    reads_request_state = False
+
+    def __init__(self, max_batch: int = 64) -> None:
+        self.queues: dict[str, list[Request]] = {}
+        self.max_batch = max_batch
+        self.n_timed_out = 0
+
+    def on_arrival(self, req: Request, now: float) -> None:
+        self.queues.setdefault(req.model_id, []).append(req)
+
+    def on_arrivals(self, reqs, now: float) -> None:
+        for r in reqs:
+            self.on_arrival(r, now)
+
+    def next_batch(self, now: float):
+        best = None
+        for m in sorted(self.queues):
+            q = self.queues[m]
+            if q and (best is None or len(q) > len(self.queues[best])):
+                best = m
+        if best is None:
+            return None, None
+        q = self.queues[best]
+        k = min(self.max_batch, len(q))
+        picked = q[:k]
+        del q[:k]
+        return Batch(picked, k, model=best), None
+
+    def on_batch_done(self, batch, now, alone) -> None:
+        pass
+
+    @property
+    def n_pending(self) -> int:
+        return sum(len(q) for q in self.queues.values())
+
+
+def residency_churn(full: bool = False,
+                    json_path: str = "BENCH_sched.json") -> None:
+    """Residency-cache cost under churn (DESIGN.md §13), two measurements:
+
+    ``acquire_us`` — µs per :meth:`ResidencyState.acquire` call on a
+    Zipf-skewed model stream with a cache that holds ~1 resident model
+    (every head/tail alternation evicts), per eviction policy.  The
+    acquire sits on the dispatch hot path of every residency-managed
+    batch, so the gate budgets it absolutely.
+
+    ``residency_slowdown`` — events/s through ``run_event_loop`` on a
+    multi-model FIFO trace, residency-free over residency-managed, per
+    engine (same process, same trace, so the ratio is immune to runner
+    load).  Both engines must agree exactly on the managed outcome
+    (asserted) — the residency extension of the engine-equivalence
+    contract."""
+    from repro.serving.residency import ResidencyPlan, model_roster, zoo_profile
+    from repro.serving.workload import zipf_weights
+
+    # --- acquire micro: cache holds ~1 model, Zipf stream forces churn
+    n_models = 6
+    roster = model_roster(n_models)
+    worker_mem = 1.05 * max(zoo_profile(m).nbytes for m in roster)
+    n_calls = 200_000 if full else 50_000
+    rng = np.random.default_rng(0)
+    stream = rng.choice(n_models, size=n_calls,
+                        p=zipf_weights(n_models, 1.1))
+    names = [roster[i] for i in stream.tolist()]
+    acquire_row: dict[str, float] = {}
+    for policy in ("lru", "cost_aware"):
+        plan = ResidencyPlan.from_zoo(roster, worker_mem=worker_mem,
+                                      policy=policy)
+        state = plan.start(1)
+        t0 = time.perf_counter()
+        now = 0.0
+        for m in names:
+            now += state.acquire(0, m, now)
+        us = (time.perf_counter() - t0) / n_calls * 1e6
+        acquire_row[f"{policy}_acquire_us"] = round(us, 3)
+        acquire_row[f"{policy}_hit_rate"] = round(
+            state.n_hits / n_calls, 3
+        )
+    print(f"residency/acquire,{acquire_row['lru_acquire_us']:.3f},"
+          f"cost_aware_us={acquire_row['cost_aware_acquire_us']:.3f} "
+          f"hit={acquire_row['lru_hit_rate']:.2f}",
+          flush=True)
+
+    # --- end-to-end: residency-managed vs residency-free FIFO replay
+    plan4 = ResidencyPlan.from_zoo(model_roster(4),
+                                   worker_mem=float(3 * 2**30))
+    probs4 = zipf_weights(4, 1.1)
+    roster4 = model_roster(4)
+    sizes = (10_000, 100_000) if full else (10_000,)
+    reps = 3
+    out: dict[str, dict[str, float]] = {}
+    for n in sizes:
+        master = _eventloop_requests(n, tick_ms=4.0, rate_per_ms=64.0)
+        which = np.random.default_rng(1).choice(4, size=n, p=probs4)
+        for r, m in zip(master, which.tolist()):
+            r.model_id = roster4[m]
+        row: dict[str, float] = {}
+        results = {}
+        for engine in ("scalar", "array"):
+            per_mode = {}
+            for mode, residency in (("free", None), ("managed", plan4)):
+                best = float("inf")
+                for _ in range(reps):
+                    reqs = [
+                        Request(app_id=r.app_id, release=r.release, slo=r.slo,
+                                true_time=r.true_time, model_id=r.model_id)
+                        for r in master
+                    ]
+                    workers = [Worker(_FifoModelScheduler(), _ConstExecutor())]
+                    t0 = time.perf_counter()
+                    res = run_event_loop(
+                        reqs, workers, engine=engine, residency=residency
+                    )
+                    best = min(best, time.perf_counter() - t0)
+                per_mode[mode] = (res.n_total + res.n_batches) / best
+                if mode == "managed":
+                    results[engine] = res
+            slowdown = per_mode["free"] / per_mode["managed"]
+            row[f"{engine}_managed_events_per_s"] = round(
+                per_mode["managed"], 1
+            )
+            row[f"{engine}_residency_slowdown"] = round(slowdown, 3)
+        sc, ar = results["scalar"], results["array"]
+        assert (
+            sc.n_finished_ok, sc.n_finished_late, sc.n_batches,
+            sc.n_model_loads, sc.n_model_evicts, sc.model_load_ms,
+        ) == (
+            ar.n_finished_ok, ar.n_finished_late, ar.n_batches,
+            ar.n_model_loads, ar.n_model_evicts, ar.model_load_ms,
+        ), "engines diverged under the residency plan"
+        row["n_model_loads"] = sc.n_model_loads
+        row["n_model_evicts"] = sc.n_model_evicts
+        print(f"residency/eventloop/n{n},"
+              f"{1e6 / row['array_managed_events_per_s']:.3f},"
+              f"slowdown={row['array_residency_slowdown']:.2f}x "
+              f"scalar_slowdown={row['scalar_residency_slowdown']:.2f}x "
+              f"loads={sc.n_model_loads}",
+              flush=True)
+        out[str(n)] = row
+
+    _merge_sched_artifact(json_path, {
+        "residency": {
+            "unit_note": "acquire = us per ResidencyState.acquire on a "
+                         "Zipf model stream with a ~1-model cache (churn); "
+                         "eventloop = events/s residency-free over "
+                         "residency-managed on the same multi-model FIFO "
+                         "trace per engine; best of 3 reps",
+            "acquire": acquire_row,
+            "sizes": out,
+        },
+    })
+
+
 def _token_requests(n: int, rate_per_ms: float, ttft_ms: float,
                     tpot_ms: float, seed: int = 0) -> list[Request]:
     """Token-mode trace: geometric output lengths (mean 24), uniform

@@ -38,6 +38,7 @@ def main() -> None:
         "eventloop": queue_micro.eventloop_throughput,  # merges into BENCH_sched.json
         "eventloop_faults": queue_micro.eventloop_faults,  # merges into BENCH_sched.json
         "token_decode": queue_micro.token_decode,  # merges into BENCH_sched.json
+        "residency": queue_micro.residency_churn,  # merges into BENCH_sched.json
         "fig13": sensitivity.fig13_b_sweep,
         "fig14": sensitivity.fig14_min_exec,
         "roofline": bench_roofline,

@@ -33,7 +33,12 @@ from .hull import HullQueue
 from .priority import DEFAULT_B, BinScoreModel, Score
 from .profiler import OnlineProfiler, ProfilerConfig
 from .request import PiecewiseStepCost, Request, StepCost
-from .scheduler import Batch, OrlojScheduler, SchedulerConfig
+from .scheduler import (
+    Batch,
+    MultiModelOrlojScheduler,
+    OrlojScheduler,
+    SchedulerConfig,
+)
 from .eventloop import (
     DISPATCH_POLICIES,
     ModelExecutor,
@@ -61,6 +66,7 @@ __all__ = [
     "Request",
     "StepCost",
     "Batch",
+    "MultiModelOrlojScheduler",
     "OrlojScheduler",
     "SchedulerConfig",
     "BASELINES",

@@ -174,6 +174,28 @@ class FaultStateLike(Protocol):
     ) -> tuple[bool, float]: ...
 
 
+class ResidencyPlanLike(Protocol):
+    """Duck-typed weights-residency plan
+    (:class:`repro.serving.residency.ResidencyPlan`).  As with faults, the
+    core engine never imports the serving layer — it only needs
+    ``start(n_workers)`` to mint the per-run cache state."""
+
+    def start(self, n_workers: int) -> "ResidencyStateLike": ...
+
+
+class ResidencyStateLike(Protocol):
+    """Per-run residency state: deterministic (no rng, virtual time only),
+    so both engines charging the same dispatch order stay bit-identical."""
+
+    n_loads: int
+    n_evicts: int
+    load_ms_total: float
+
+    def resident(self, w: int, model_id: str) -> bool: ...
+
+    def acquire(self, w: int, model_id: str, now: float) -> float: ...
+
+
 @dataclasses.dataclass
 class ModelExecutor:
     """Ground-truth execution following the paper's padding model."""
@@ -321,6 +343,12 @@ class SimResult:
     # True when the run was cut off by ``wall_budget_s`` — partial stats,
     # everything unresolved counted as unserved.
     truncated: bool = False
+    # Multi-model residency accounting (DESIGN.md §13): weight loads,
+    # evictions, and the total virtual ms of load/evict stall charged to
+    # the clock.  All zero when no residency plan is active.
+    n_model_loads: int = 0
+    n_model_evicts: int = 0
+    model_load_ms: float = 0.0
 
     @property
     def conserved(self) -> bool:
@@ -397,7 +425,7 @@ class _Pool:
     bookkeeping entirely."""
 
     __slots__ = ("workers", "busy", "queued_work", "rng", "track_work",
-                 "pending_offset", "_charges", "_swept_timeouts")
+                 "pending_offset", "_charges", "_swept_timeouts", "residency")
 
     def __init__(
         self,
@@ -408,6 +436,10 @@ class _Pool:
         self.workers = list(workers)
         self.busy = [False] * len(self.workers)
         self.queued_work = [0.0] * len(self.workers)
+        # Weights-residency state (multi-model runs only, DESIGN.md §13):
+        # set by run_event_loop so residency-aware dispatch policies can
+        # probe which workers hold a request's model.  None otherwise.
+        self.residency: "ResidencyStateLike | None" = None
         # Same-timestamp arrivals routed to a worker but not yet delivered
         # to its scheduler (the coalescing window): count-based policies add
         # this so a burst does not all land on one replica.
@@ -505,12 +537,46 @@ def _p2c(workers: Sequence[Worker], rng: np.random.Generator) -> _PickFn:
     return pick
 
 
+def _residency_aware(
+    workers: Sequence[Worker], rng: np.random.Generator
+) -> _PickFn:
+    """Residency before backlog (DESIGN.md §13): among workers already
+    holding the request's model weights, pick the least loaded; only when
+    nobody holds them fall back to least-loaded overall.  The fallback
+    creates natural model→worker affinity — once a model is loaded
+    somewhere, its traffic sticks there instead of spraying cold starts
+    across the pool the way residency-blind policies do.  Fully
+    deterministic (ties break on worker index, no rng), so the policy
+    cannot perturb engine bit-identity."""
+
+    def pick(req: Request, now: float, pool: _Pool) -> int:
+        res = pool.residency
+        best, best_key = 0, None
+        for i, w in enumerate(pool.workers):
+            load = (
+                getattr(w.scheduler, "n_pending", 0) + pool.busy[i]
+                + pool.pending_offset[i]
+            )
+            hit = (
+                res is not None
+                and req.model_id is not None
+                and res.resident(i, req.model_id)
+            )
+            key = (not hit, load, i)  # resident first, then backlog
+            if best_key is None or key < best_key:
+                best, best_key = i, key
+        return best
+
+    return pick
+
+
 # name -> factory(workers, rng) -> pick(request, now, pool) -> worker index
 DISPATCH_POLICIES: dict[str, Callable] = {
     "round_robin": _round_robin,
     "least_loaded": _least_loaded,
     "jsq_work": _jsq_work,
     "p2c": _p2c,
+    "residency": _residency_aware,
 }
 
 _ARRIVAL, _DONE, _WAKE = 0, 1, 2
@@ -543,6 +609,7 @@ def run_event_loop(
     seed: int = 0,
     engine: str = "scalar",
     faults: "FaultPlanLike | None" = None,
+    residency: "ResidencyPlanLike | None" = None,
     wall_budget_s: float = 0.0,
 ) -> SimResult:
     """Drive ``workers`` replica schedulers against one arrival stream.
@@ -581,6 +648,16 @@ def run_event_loop(
     time: the result is marked ``truncated`` and everything unresolved
     counts as unserved — a graceful partial answer instead of a hung grid
     cell.
+
+    ``residency`` is an optional
+    :class:`~repro.serving.residency.ResidencyPlan`: per-worker weights
+    caches for multi-model serving (DESIGN.md §13).  Every dispatched
+    batch must then carry ``Batch.model``; a cache miss stalls execution
+    by the model's load time (plus eviction costs), charged identically
+    by both engines.  ``residency=None`` (every single-model run) takes
+    zero new branches — the ``single-model-noop`` claim gates this
+    bitwise.  Residency composes with neither fault injection nor decode
+    batches (both raise ``ValueError``, the pinned unsupported seams).
     """
     workers = list(workers)
     if not workers:
@@ -605,6 +682,15 @@ def run_event_loop(
         raise ValueError(
             f"unknown engine {engine!r}; known: {list(ENGINES)}"
         )
+    if residency is not None and faults is not None:
+        # Crash-during-load semantics (is a half-loaded model resident?
+        # does the stall replay after restart?) have no honest answer yet;
+        # fail loudly rather than charge something undefined.
+        raise ValueError(
+            "multi-model residency is not supported under fault injection"
+        )
+    res = residency.start(n) if residency is not None else None
+    pool.residency = res
     fs = faults.start(n) if faults is not None else None
     if fs is not None and (fs.crashes or fs.plan.batch_timeout_ms > 0.0):
         # Crash termination leans on every scheduler's drop counter to
@@ -625,6 +711,7 @@ def run_event_loop(
             horizon=horizon,
             charge_scheduler_overhead=charge_scheduler_overhead,
             fs=fs,
+            res=res,
             wall_budget_s=wall_budget_s,
         )
 
@@ -692,6 +779,11 @@ def run_event_loop(
                     "decode (token-level) batches are not supported "
                     "under fault injection"
                 )
+            if res is not None:
+                raise ValueError(
+                    "decode (token-level) batches are not supported "
+                    "under multi-model residency"
+                )
             start = now + overhead
             run = _DecodeRun(batch, list(batch.requests), None)
             dur = _decode_step_dur(
@@ -709,6 +801,20 @@ def run_event_loop(
             peak_heap = max(peak_heap, len(events))
         elif batch is not None:
             start = now + overhead
+            if res is not None:
+                # Weights residency (DESIGN.md §13): a cache miss stalls
+                # the batch by the load time (plus eviction costs) before
+                # execution can begin.  The worker is occupied for the
+                # whole stall — loads are not overlapped with compute.
+                if batch.model is None:
+                    raise ValueError(
+                        "residency-managed run dispatched a batch without "
+                        "a model id (scheduler must stamp Batch.model)"
+                    )
+                stall = res.acquire(w, batch.model, start)
+                start += stall
+            else:
+                stall = 0.0
             dur = worker.executor(batch, start)
             ev_kind = _DONE
             if fs is not None:
@@ -723,8 +829,8 @@ def run_event_loop(
                 r.started = start
                 pool.discharge(w, r.rid)
             pool.busy[w] = True
-            worker_busy_time += dur
-            inflight[w] = (start, start + dur)
+            worker_busy_time += stall + dur
+            inflight[w] = (start - stall, start + dur)
             heapq.heappush(
                 events, (start + dur, next(seq), ev_kind, (w, batch, epoch[w]))
             )
@@ -1021,6 +1127,9 @@ def run_event_loop(
         n_failed=n_failed,
         n_retried=n_retried,
         truncated=truncated,
+        n_model_loads=res.n_loads if res is not None else 0,
+        n_model_evicts=res.n_evicts if res is not None else 0,
+        model_load_ms=res.load_ms_total if res is not None else 0.0,
     )
 
 
@@ -1045,6 +1154,7 @@ def _array_loop(
     horizon: float | None,
     charge_scheduler_overhead: bool,
     fs: "FaultStateLike | None" = None,
+    res: "ResidencyStateLike | None" = None,
     wall_budget_s: float = 0.0,
 ) -> SimResult:
     """The array-backed engine behind ``run_event_loop(engine="array")``.
@@ -1165,6 +1275,11 @@ def _array_loop(
                     "decode (token-level) batches are not supported "
                     "under fault injection"
                 )
+            if res is not None:
+                raise ValueError(
+                    "decode (token-level) batches are not supported "
+                    "under multi-model residency"
+                )
             start = now + overhead
             rows = batch.rows
             if rows is None:
@@ -1201,6 +1316,18 @@ def _array_loop(
                 peak_pending = pending
         elif batch is not None:
             start = now + overhead
+            if res is not None:
+                # Weights residency — charged exactly as in the scalar
+                # loop: same acquire() call order, same stall arithmetic.
+                if batch.model is None:
+                    raise ValueError(
+                        "residency-managed run dispatched a batch without "
+                        "a model id (scheduler must stamp Batch.model)"
+                    )
+                stall = res.acquire(w, batch.model, start)
+                start += stall
+            else:
+                stall = 0.0
             dur = worker.executor(batch, start)
             ev_kind = _DONE
             if fs is not None:
@@ -1232,8 +1359,8 @@ def _array_loop(
                 for r in batch.requests:
                     r.started = start
             busy[w] = True
-            worker_busy_time += dur
-            inflight[w] = (start, start + dur)
+            worker_busy_time += stall + dur
+            inflight[w] = (start - stall, start + dur)
             if fs is not None:
                 running[w] = (batch, rows)
             wheel.push(
@@ -1663,6 +1790,9 @@ def _array_loop(
         n_failed=n_failed,
         n_retried=n_retried,
         truncated=truncated,
+        n_model_loads=res.n_loads if res is not None else 0,
+        n_model_evicts=res.n_evicts if res is not None else 0,
+        model_load_ms=res.load_ms_total if res is not None else 0.0,
     )
 
 

@@ -93,6 +93,11 @@ class Request:
     cost: float = 1.0
     extra_deadlines: tuple[tuple[float, float], ...] = ()
     payload: Any = None  # e.g. token ids for the real JAX engine
+    # Multi-model serving (DESIGN.md §13): which zoo model this request
+    # targets.  ``None`` (every single-model trace) keeps the residency
+    # tier fully inert.  Visible to schedulers and dispatch policies —
+    # clients know what model they are calling.
+    model_id: str | None = None
 
     # Token-level (continuous batching) fields.  ``prompt_tokens`` is
     # visible to schedulers (the prompt is known at admission);

@@ -43,7 +43,7 @@ from .priority import DEFAULT_B, RESET_EXPONENT, BinScoreModel, aggregate_steps
 from .profiler import OnlineProfiler, ProfilerConfig
 from .request import PiecewiseStepCost, Request
 
-__all__ = ["SchedulerConfig", "OrlojScheduler", "Batch"]
+__all__ = ["SchedulerConfig", "OrlojScheduler", "MultiModelOrlojScheduler", "Batch"]
 
 
 def _flatten_steps(
@@ -120,12 +120,17 @@ class Batch:
     ``on_decode_step`` hook and leave at their (data-dependent) EOS step.
     Requires a worker executor exposing ``step_time`` and a scheduler
     implementing the token-mode contract (:mod:`repro.core.tokensched`).
+
+    ``model`` names the zoo model the batch executes (DESIGN.md §13) —
+    stamped by model-aware schedulers so a residency-managed event loop
+    can charge the load stall before execution.  ``None`` everywhere else.
     """
 
     requests: list[Request]
     batch_size: int
     rows: "range | list[int] | None" = None
     decode: bool = False
+    model: str | None = None
 
     def __len__(self) -> int:
         return len(self.requests)
@@ -401,8 +406,12 @@ class OrlojScheduler:
             heapq.heappop(st.deadline_heap)
         return None
 
-    def next_batch(self, now: float) -> tuple[Batch | None, float | None]:
-        """One scheduler iteration.  Returns (batch, next_wake_time)."""
+    def _prepare(self, now: float) -> tuple[float, int] | None:
+        """Alg.-1 maintenance phases + candidate selection, *without*
+        popping: returns the winning ``(earliest deadline, batch size)``
+        or ``None``.  Split from :meth:`next_batch` so a multi-model
+        facade can let per-model queues compete on deadlines before
+        committing one of them to a destructive :meth:`_pop`."""
         self._maybe_reset_base(now)
         self._update_due_scores(now)
         self._drop_phase(now)
@@ -412,20 +421,17 @@ class OrlojScheduler:
             d = self._earliest_deadline(bs)
             if d is not None and len(st.hull) >= bs:
                 candidates.append((d, bs))
-        candidate: int | None = None
-        if candidates:
-            if self.cfg.bs_order == "paper_desc":
-                candidates.sort(key=lambda e: (e[0], e[1]), reverse=True)
-            else:  # earliest deadline first, larger batch on ties
-                candidates.sort(key=lambda e: (e[0], -e[1]))
-            candidate = candidates[0][1]
+        if not candidates:
+            return None
+        if self.cfg.bs_order == "paper_desc":
+            candidates.sort(key=lambda e: (e[0], e[1]), reverse=True)
+        else:  # earliest deadline first, larger batch on ties
+            candidates.sort(key=lambda e: (e[0], -e[1]))
+        return candidates[0]
 
-        if candidate is None:
-            wake = self._milestones[0][0] if self._milestones else None
-            return None, wake
-
-        # PopBatch: top `candidate` requests by ORLOJ score, in one
-        # fixed-x top-k pop (avoids k cascading tombstone purges).
+    def _pop(self, candidate: int, now: float) -> Batch | None:
+        """PopBatch: top ``candidate`` requests by ORLOJ score, in one
+        fixed-x top-k pop (avoids k cascading tombstone purges)."""
         x = self._x(now)
         st = self._bs_state[candidate]
         picked: list[Request] = []
@@ -435,10 +441,125 @@ class OrlojScheduler:
             self._feasible[rid].discard(candidate)
             self._remove(rid)
         if not picked:
+            return None
+        return Batch(picked, candidate)
+
+    def next_batch(self, now: float) -> tuple[Batch | None, float | None]:
+        """One scheduler iteration.  Returns (batch, next_wake_time)."""
+        best = self._prepare(now)
+        if best is None:
+            wake = self._milestones[0][0] if self._milestones else None
+            return None, wake
+        batch = self._pop(best[1], now)
+        if batch is None:
             return None, None
-        return Batch(picked, candidate), None
+        return batch, None
 
     # -- introspection -------------------------------------------------
     @property
     def n_pending(self) -> int:
         return len(self._pending)
+
+
+class MultiModelOrlojScheduler:
+    """One shared Orloj queue over per-model keyed score models (§13).
+
+    Multi-model serving keeps Algorithm 1 intact *per model*: each zoo
+    model gets its own :class:`OrlojScheduler` (own ``L_B`` histograms,
+    own :class:`~repro.core.priority.BinScoreModel` per batch size, own
+    profiler feedback loop), built from that model's scaled per-app
+    distributions.  The facade presents the event loop with one queue:
+    arrivals route by ``Request.model_id``, and ``next_batch`` lets every
+    model's candidate compete on ``(earliest deadline, -batch size)`` —
+    the same ordering Alg. 1 uses across batch sizes — before committing
+    exactly one inner to a destructive pop.  The winning batch is stamped
+    with ``Batch.model`` so a residency-managed event loop can charge the
+    weights-load stall before execution.
+
+    Batches never mix models (one set of weights executes at a time), so
+    the executor's Eq.-3 batch time stays well-defined per batch.
+    """
+
+    name = "orloj-multi"
+    # Same contract as OrlojScheduler: feedback arrives via on_batch_done,
+    # never by reading request bookkeeping fields.
+    reads_request_state = False
+
+    def __init__(
+        self,
+        latency_model: BatchLatencyModel,
+        initial_dists_by_model: dict[str, dict[str, EmpiricalDistribution]],
+        cfg: SchedulerConfig | None = None,
+    ) -> None:
+        if not initial_dists_by_model:
+            raise ValueError("multi-model scheduler needs at least one model")
+        self.cfg = cfg or SchedulerConfig()
+        self.latency_model = latency_model
+        self._inner: dict[str, OrlojScheduler] = {
+            m: OrlojScheduler(latency_model, cfg=self.cfg, initial_dists=dists)
+            for m, dists in initial_dists_by_model.items()
+        }
+
+    def _route(self, req: Request) -> OrlojScheduler:
+        sched = self._inner.get(req.model_id)
+        if sched is None:
+            raise ValueError(
+                f"request {req.rid} targets unknown model {req.model_id!r} "
+                f"(scheduler serves {sorted(self._inner)})"
+            )
+        return sched
+
+    # -- arrival / feedback hooks --------------------------------------
+    def on_arrival(self, req: Request, now: float) -> None:
+        self._route(req).on_arrivals((req,), now)
+
+    def on_arrivals(self, reqs: Sequence[Request], now: float) -> None:
+        by_model: dict[str, list[Request]] = {}
+        for r in reqs:
+            self._route(r)  # loud on unknown/unset model ids
+            by_model.setdefault(r.model_id, []).append(r)
+        for m, group in by_model.items():
+            self._inner[m].on_arrivals(group, now)
+
+    def on_arrivals_cols(self, store, lo: int, hi: int, now: float) -> None:
+        self.on_arrivals(store.requests[lo:hi], now)
+
+    def on_batch_done(
+        self, batch: Batch, now: float, alone_times_ms: Sequence[float]
+    ) -> None:
+        if batch.model is None:
+            raise ValueError("multi-model batch completed without a model id")
+        self._inner[batch.model].on_batch_done(batch, now, alone_times_ms)
+
+    # -- batch selection ------------------------------------------------
+    def next_batch(self, now: float) -> tuple[Batch | None, float | None]:
+        best: tuple[float, int, int] | None = None
+        best_model: str | None = None
+        for i, (m, sched) in enumerate(self._inner.items()):
+            cand = sched._prepare(now)
+            if cand is None:
+                continue
+            # deadline, larger batch on ties, then model roster order —
+            # a total order, so the winner is deterministic
+            key = (cand[0], -cand[1], i)
+            if best is None or key < best:
+                best, best_model = key, m
+        if best_model is None:
+            wakes = [
+                s._milestones[0][0] for s in self._inner.values() if s._milestones
+            ]
+            return None, (min(wakes) if wakes else None)
+        batch = self._inner[best_model]._pop(-best[1], now)
+        if batch is None:
+            return None, None
+        batch.model = best_model
+        return batch, None
+
+    # -- introspection --------------------------------------------------
+    @property
+    def n_pending(self) -> int:
+        return sum(s.n_pending for s in self._inner.values())
+
+    @property
+    def n_timed_out(self) -> int:
+        return sum(s.n_timed_out for s in self._inner.values())

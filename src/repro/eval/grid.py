@@ -515,6 +515,142 @@ def tokens_smoke() -> list[ExperimentSpec]:
     )
 
 
+# --------------------------------------------------------------------------
+# Multi-model grids (DESIGN.md §13): Zipf-skewed traffic over a zoo
+# roster with a weights-residency cache per worker.  Feeds two gated
+# claims: ``single-model-noop`` (the tier is bitwise inert at
+# n_models=1, scalar AND array) and ``cold-start-dominance``
+# (residency-aware dispatch beats residency-blind round_robin under
+# memory pressure), plus scalar/array equivalence pairs under an active
+# residency plan on both eviction policies.
+
+# 3 GiB holds roughly one resident zoo model (olmo_1b 2.19 GiB +
+# internvl2_1b 1.17 GiB > 3 GiB) — the memory-pressure point where
+# residency-blind dispatch reloads weights on nearly every batch.
+_MM_MEM = float(3 * 2**30)
+
+
+def _mm_noop_twins(seeds: Sequence[int]) -> list[ExperimentSpec]:
+    """Paired cells per (engine, seed): identical specs except one leaves
+    every multi-model knob at its default and the other sets skew, memory
+    and eviction policy while keeping ``n_models=1``.  The
+    single-model-noop claim asserts each pair is bitwise identical — the
+    residency tier costs nothing until a second model exists."""
+    base = dict(
+        workload="bimodal",
+        workload_params={"std": 1.0},
+        slo_scale=1.5,
+        utilization=0.85 * 2,
+        n_requests=300,
+        # 2-worker pool, like the chaos noop twins: keeps the twins out
+        # of the single-worker paper-claim domains (which would state
+        # tight-slo-dominance on a grid carrying no baselines).
+        n_workers=2,
+        policy="round_robin",
+    )
+    return [
+        ExperimentSpec(
+            **base,
+            **knobs,
+            seed=seed,
+            engine=engine,
+            tag=f"mm/noop-{variant}/{engine}/s{seed}",
+        )
+        for seed in seeds
+        for engine in ("scalar", "array")
+        for variant, knobs in (
+            ("bare", {}),
+            (
+                "inert",
+                dict(
+                    n_models=1,
+                    model_skew=1.7,
+                    worker_mem=_MM_MEM,
+                    residency_policy="cost_aware",
+                ),
+            ),
+        )
+    ]
+
+
+def _mm_coldstart_cells(
+    seeds: Sequence[int], n_requests: int = 400
+) -> list[ExperimentSpec]:
+    """The memory-pressure sweep: 4 zoo models over a 4-worker pool whose
+    cache holds ~1 model, residency-aware vs residency-blind dispatch on
+    the same traces.  Offered load 0.4 x 4 capacities — low enough that
+    the Zipf head fits on one worker, so the comparison isolates
+    cold-start churn rather than load imbalance."""
+    return [
+        ExperimentSpec(
+            workload="bimodal",
+            workload_params={"std": 1.0},
+            slo_scale=1.5,
+            utilization=0.4 * 4,
+            n_requests=n_requests,
+            seed=seed,
+            system="orloj",
+            n_workers=4,
+            policy=policy,
+            n_models=4,
+            worker_mem=_MM_MEM,
+            tag=f"mm/coldstart/{policy}/s{seed}",
+        )
+        for policy in ("residency", "round_robin")
+        for seed in seeds
+    ]
+
+
+def _mm_equiv_cells() -> list[ExperimentSpec]:
+    """Scalar/array twins under an *active* residency plan, one pair per
+    eviction policy, extending array-scalar-equivalence to weight-load
+    stalls (the residency counters are equivalence fields too).  Distinct
+    utilization so their case label never seed-averages into the
+    cold-start sweep's cells."""
+    return [
+        ExperimentSpec(
+            workload="bimodal",
+            workload_params={"std": 1.0},
+            slo_scale=1.5,
+            utilization=0.5 * 4,
+            n_requests=400,
+            seed=13,
+            system="orloj",
+            n_workers=4,
+            policy="residency",
+            n_models=4,
+            worker_mem=_MM_MEM,
+            residency_policy=respolicy,
+            engine=engine,
+            tag=f"mm/equiv-{respolicy}/{engine}",
+        )
+        for respolicy in ("lru", "cost_aware")
+        for engine in ("scalar", "array")
+    ]
+
+
+def multi_model() -> list[ExperimentSpec]:
+    """The multi-model grid: noop twins (both engines), the cold-start
+    dominance sweep at 5 seeds, and scalar/array equivalence pairs under
+    both eviction policies.  Gated on ``single-model-noop``,
+    ``cold-start-dominance`` and ``array-scalar-equivalence``."""
+    return (
+        _mm_noop_twins(seeds=(7, 11))
+        + _mm_coldstart_cells(seeds=_SMALL_SEEDS)
+        + _mm_equiv_cells()
+    )
+
+
+def multi_model_smoke() -> list[ExperimentSpec]:
+    """Trimmed CI tier of :func:`multi_model`: one noop-twin set, a
+    3-seed cold-start sweep, and the equivalence pairs (~30 s serial)."""
+    return (
+        _mm_noop_twins(seeds=(7,))
+        + _mm_coldstart_cells(seeds=(7, 11, 23))
+        + _mm_equiv_cells()
+    )
+
+
 def slo2_bimodal() -> list[ExperimentSpec]:
     """Diagnostic grid for the intermediate-SLO regime (DESIGN.md §7):
     bimodal at SLO scales around 2 x P99, ORLOJ vs Nexus, 5 seeds.
@@ -549,6 +685,8 @@ GRIDS = {
     "slo2-bimodal": slo2_bimodal,
     "tokens": tokens,
     "tokens-smoke": tokens_smoke,
+    "multi-model": multi_model,
+    "multi-model-smoke": multi_model_smoke,
 }
 
 

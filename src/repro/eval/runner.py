@@ -34,6 +34,7 @@ from ..core import (
     BASELINES,
     BatchLatencyModel,
     ModelExecutor,
+    MultiModelOrlojScheduler,
     OrlojScheduler,
     SchedulerConfig,
     Worker,
@@ -46,6 +47,7 @@ from ..core.tokensched import (
     TokenSchedConfig,
 )
 from ..serving.faults import FaultPlan
+from ..serving.residency import ResidencyPlan, latency_scales, model_roster
 from ..serving.trace import (
     RequestSet,
     TraceConfig,
@@ -83,7 +85,26 @@ def _make_scheduler(
         if batch_sizes is not None:
             cfg_kw.setdefault("batch_sizes", tuple(batch_sizes))
         cfg = SchedulerConfig(**cfg_kw)
+        if spec.n_models > 1:
+            # One BinScoreModel per zoo model: each model's alone-time
+            # distributions are the base trace dists scaled by its
+            # latency ladder (the same scaling _assign_models applied to
+            # true_time), so the priors match the replayed traffic.
+            base = rs.initial_dists()
+            dists = {
+                m: {a: d.affine(s, 0.0) for a, d in base.items()}
+                for m, s in zip(
+                    model_roster(spec.n_models), latency_scales(spec.n_models)
+                )
+            }
+            return MultiModelOrlojScheduler(lm, dists, cfg=cfg)
         return OrlojScheduler(lm, cfg=cfg, initial_dists=rs.initial_dists())
+    if spec.n_models > 1:
+        raise ValueError(
+            "multi-model cells support system='orloj' only: baselines "
+            "have no per-model distribution state to key batches by "
+            "(DESIGN.md §13)"
+        )
     try:
         cls = BASELINES[spec.system]
     except KeyError:
@@ -178,6 +199,9 @@ def _fold_result(
         n_rejected=res.n_rejected,
         n_failed=res.n_failed,
         n_retried=res.n_retried,
+        n_model_loads=res.n_model_loads,
+        n_model_evicts=res.n_model_evicts,
+        model_load_ms=res.model_load_ms,
         truncated=res.truncated,
         utilization=res.utilization,
         makespan_ms=res.makespan_ms,
@@ -255,6 +279,11 @@ def _run_token_spec(spec: ExperimentSpec) -> ExperimentResult:
         )
     if spec.faults:
         raise ValueError("decode (token-level) cells do not support fault plans")
+    if spec.n_models > 1:
+        raise ValueError(
+            "decode (token-level) cells do not support multi-model "
+            "serving (DESIGN.md §13)"
+        )
     if spec.sched_cfg:
         raise ValueError(
             "tokens cells configure schedulers via workload_params "
@@ -295,6 +324,11 @@ def run_spec(spec: ExperimentSpec) -> ExperimentResult:
     spec's substrate)."""
     if spec.workload == "tokens":
         return _run_token_spec(spec)
+    if spec.n_models > 1 and spec.substrate != "sim":
+        raise ValueError(
+            "multi-model cells run on the sim substrate only: the engine "
+            "substrate serves one compiled model per process (DESIGN.md §13)"
+        )
     if spec.substrate != "sim":
         # Deferred import: the engine substrate pulls in the JAX model
         # stack only when an engine cell actually runs, so sim-only
@@ -314,8 +348,22 @@ def run_spec(spec: ExperimentSpec) -> ExperimentResult:
             utilization=spec.utilization,
             seed=spec.seed,
             tick_ms=spec.tick_ms,
+            n_models=spec.n_models,
+            model_skew=spec.model_skew,
         ),
     )
+    residency = None
+    if spec.n_models > 1:
+        if spec.worker_mem <= 0:
+            raise ValueError(
+                "multi-model cells must set worker_mem (cache capacity "
+                "in bytes; DESIGN.md §13)"
+            )
+        residency = ResidencyPlan.from_zoo(
+            model_roster(spec.n_models),
+            worker_mem=spec.worker_mem,
+            policy=spec.residency_policy,
+        )
     policy: str | Callable = spec.policy
     if spec.n_pools > 1:
         # Fleet mode: the spec's policy routes BETWEEN pools, intra_policy
@@ -342,6 +390,7 @@ def run_spec(spec: ExperimentSpec) -> ExperimentResult:
         seed=spec.seed if spec.loop_seed is None else spec.loop_seed,
         engine=spec.engine,
         faults=faults,
+        residency=residency,
         wall_budget_s=spec.wall_budget_s,
     )
     # simlint: ignore[R1] -- wall_time_s metadata column; the replay itself is virtual-time

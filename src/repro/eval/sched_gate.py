@@ -37,6 +37,16 @@ fires on every token boundary of a running decode batch, so unlike
 cost multiplies into every generated token.  Both schedulers' measured
 ``decision_us`` must stay under :data:`MAX_DECODE_HOOK_US` absolutely
 and within the ratio band of the committed baseline.
+
+The ``residency`` section (``queue_micro.py::residency_churn``,
+DESIGN.md §13) gates the multi-model weights-residency machinery both
+ways: ``ResidencyState.acquire`` sits on the dispatch path of every
+residency-managed batch and is budgeted absolutely per call
+(:data:`MAX_ACQUIRE_US`, per eviction policy), and the end-to-end
+events/s cost of running the event loop under a churning plan versus
+residency-free on the same trace must stay under
+:data:`MAX_RESIDENCY_SLOWDOWN` per engine (same-process ratio, immune
+to runner load, like the fault slowdown cap).
 """
 
 from __future__ import annotations
@@ -52,6 +62,8 @@ __all__ = [
     "MIN_EVENTLOOP_SPEEDUP",
     "MAX_FAULT_SLOWDOWN",
     "MAX_DECODE_HOOK_US",
+    "MAX_ACQUIRE_US",
+    "MAX_RESIDENCY_SLOWDOWN",
 ]
 
 DEFAULT_MAX_RATIO = 2.5
@@ -77,6 +89,23 @@ MAX_FAULT_SLOWDOWN = 3.0
 # <1us/call for token FCFS; 500 gives ~2.8x headroom for loaded runners
 # while still catching an accidentally quadratic hook.
 MAX_DECODE_HOOK_US = 500.0
+# Absolute per-call budget on ``ResidencyState.acquire`` (``residency``
+# section): the acquire runs once per residency-managed batch dispatch,
+# under churn (measured on a ~1-resident-model cache where most calls
+# evict + load).  Measured ~0.6us/call for LRU and ~1.0us/call for the
+# cost-aware policy (which scans the cache for the cheapest victim); 25
+# gives wide runner headroom while catching an accidentally quadratic
+# victim scan.
+MAX_ACQUIRE_US = 25.0
+# Cap on the residency tier's end-to-end cost (``residency`` section):
+# residency-free events/s over residency-managed events/s on the same
+# multi-model FIFO trace, per engine.  The managed replay does strictly
+# more work (cache lookups, eviction, stall accounting on every batch),
+# but all of it is dict-sized — measured ~1.04x on the array engine and
+# ~1.02x on the scalar loop; 2.0 keeps the residency machinery from
+# quietly growing into the dispatch hot path (same-process ratio, immune
+# to runner load).
+MAX_RESIDENCY_SLOWDOWN = 2.0
 
 
 def check(
@@ -111,6 +140,7 @@ def check(
     fails.extend(_check_eventloop(baseline, fresh, max_ratio))
     fails.extend(_check_faults(baseline, fresh, max_ratio))
     fails.extend(_check_token_decode(baseline, fresh, max_ratio))
+    fails.extend(_check_residency(baseline, fresh, max_ratio))
     return fails
 
 
@@ -223,6 +253,70 @@ def _check_token_decode(
                     f"{us:.1f}us is more than {max_ratio:g}x above the "
                     f"baseline {b_us:.1f}us"
                 )
+    return fails
+
+
+def _check_residency(
+    baseline: Mapping, fresh: Mapping, max_ratio: float
+) -> list[str]:
+    """Gate the ``residency`` section: per eviction policy the measured
+    ``acquire`` cost must stay under the absolute :data:`MAX_ACQUIRE_US`
+    per-call budget and within the ratio band of the committed baseline;
+    per size and engine the end-to-end residency slowdown (residency-free
+    over residency-managed events/s, same process, same trace) must stay
+    under :data:`MAX_RESIDENCY_SLOWDOWN`, and the managed array
+    throughput within the ratio band.  A baseline without the section
+    (pre-multi-model artifacts) skips the gate entirely."""
+    base_res = baseline.get("residency") or {}
+    if not base_res:
+        return []
+    fresh_res = fresh.get("residency") or {}
+    fails: list[str] = []
+    base_acq = base_res.get("acquire") or {}
+    fresh_acq = fresh_res.get("acquire") or {}
+    for policy in ("lru", "cost_aware"):
+        key = f"{policy}_acquire_us"
+        if key not in base_acq:
+            continue
+        us = fresh_acq.get(key)
+        if us is None:
+            fails.append(f"residency acquire: {key} missing from the "
+                         f"fresh artifact")
+            continue
+        if us > MAX_ACQUIRE_US:
+            fails.append(
+                f"residency acquire: {policy} cost {us:.1f}us exceeds the "
+                f"{MAX_ACQUIRE_US:g}us per-call budget"
+            )
+        if us > base_acq[key] * max_ratio:
+            fails.append(
+                f"residency acquire: {policy} cost {us:.2f}us is more than "
+                f"{max_ratio:g}x above the baseline {base_acq[key]:.2f}us"
+            )
+    base_sizes = base_res.get("sizes") or {}
+    fresh_sizes = fresh_res.get("sizes") or {}
+    for size, base in sorted(base_sizes.items(), key=lambda kv: int(kv[0])):
+        cur = fresh_sizes.get(size)
+        if cur is None:
+            fails.append(f"residency n={size}: missing from the fresh "
+                         f"artifact")
+            continue
+        for engine in ("scalar", "array"):
+            slowdown = cur[f"{engine}_residency_slowdown"]
+            if slowdown > MAX_RESIDENCY_SLOWDOWN:
+                fails.append(
+                    f"residency n={size}: {engine} residency slowdown "
+                    f"{slowdown:.2f}x exceeds the "
+                    f"{MAX_RESIDENCY_SLOWDOWN:g}x cap"
+                )
+        b = base["array_managed_events_per_s"]
+        f = cur["array_managed_events_per_s"]
+        if f * max_ratio < b:
+            fails.append(
+                f"residency n={size}: managed array throughput {f:.0f} "
+                f"events/s is more than {max_ratio:g}x below the baseline "
+                f"{b:.0f}/s"
+            )
     return fails
 
 

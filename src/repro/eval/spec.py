@@ -92,6 +92,16 @@ class ExperimentSpec:
     # still threads through the engine hooks (the fault-free-noop claim's
     # domain).  DESIGN.md §11.
     faults: dict = dataclasses.field(default_factory=dict)
+    # Multi-model serving (DESIGN.md §13): n_models > 1 assigns each
+    # request a zoo model (Zipf-skewed by model_skew) and threads a
+    # weights-residency cache of ``worker_mem`` bytes through the event
+    # loop — cold batches stall for the PCIe load before executing.
+    # Defaults keep the tier fully inert: n_models=1 cells are bitwise
+    # identical to pre-multi-model cells (the single-model-noop claim).
+    n_models: int = 1
+    model_skew: float = 1.1
+    worker_mem: float = 0.0  # bytes; 0 with n_models=1 means "no cache"
+    residency_policy: str = "lru"  # eviction: "lru" or "cost_aware"
     sched_cfg: dict = dataclasses.field(default_factory=dict)  # orloj only
     lm_c0: float = 25.0  # Eq.-3 batch latency model of the serving hardware
     lm_c1: float = 1.0
@@ -157,6 +167,13 @@ class ExperimentResult:
     tpot_p50_ms: float = 0.0
     tpot_p99_ms: float = 0.0
     n_tokens_out: int = 0
+    # Multi-model residency counters (DESIGN.md §13; zero for
+    # single-model cells, defaulted so pre-multi-model artifacts still
+    # parse).  model_load_ms is virtual stall time — deterministic given
+    # the spec, so it stays in stable_dict.
+    n_model_loads: int = 0
+    n_model_evicts: int = 0
+    model_load_ms: float = 0.0
     # Engine-substrate provenance (empty for sim cells): registry model,
     # profiled Eq.-3 constants, predicted-vs-measured batch-time drift, the
     # sim-twin comparison and the finish set (repro.eval.substrate).

@@ -1,13 +1,18 @@
 """Serving substrate: workloads, traces, batching, replica-pool dispatch,
-the fault-injection tier, and the real-execution engine that couples the
-ORLOJ scheduler to JAX model execution."""
+the fault-injection tier, weights residency for multi-model serving, and
+the real-execution engine that couples the ORLOJ scheduler to JAX model
+execution."""
 
 from .cluster import simulate_cluster
 from .faults import FaultPlan, FaultState, finish_probability
+from .residency import ModelProfile, ResidencyPlan, ResidencyState
 
 __all__ = [
     "FaultPlan",
     "FaultState",
     "finish_probability",
+    "ModelProfile",
+    "ResidencyPlan",
+    "ResidencyState",
     "simulate_cluster",
 ]

@@ -42,10 +42,12 @@ from ..core.eventloop import (
 )
 from ..core.request import Request
 from .faults import FaultPlan
+from .residency import ResidencyPlan
 
 __all__ = [
     "DISPATCH_POLICIES",
     "INTER_POOL_POLICIES",
+    "ResidencyPlan",
     "Worker",
     "hierarchical_policy",
     "run_event_loop",
@@ -152,6 +154,27 @@ def hierarchical_policy(
             return lo
         if intra == "round_robin":
             return next(intra_rr[p])
+        if intra == "residency":
+            # Residency before backlog, within the winning pool (DESIGN.md
+            # §13): a replica already holding the request's weights beats
+            # any warmer-queued cold one; ties fall back to least backlog.
+            res = pool.residency
+            best, best_key = lo, None
+            for w in range(lo, hi):
+                load = (
+                    getattr(pool.workers[w].scheduler, "n_pending", 0)
+                    + pool.busy[w]
+                    + pool.pending_offset[w]
+                )
+                hit = (
+                    res is not None
+                    and req.model_id is not None
+                    and res.resident(w, req.model_id)
+                )
+                key = (not hit, load, w)
+                if best_key is None or key < best_key:
+                    best, best_key = w, key
+            return best
         if intra == "p2c":
             i, j = rng.choice(hi - lo, size=2, replace=False)
             i, j = lo + int(i), lo + int(j)
@@ -192,6 +215,7 @@ def run_fleet(
     engine: str = "array",
     horizon: float | None = None,
     faults: "FaultPlan | None" = None,
+    residency: "ResidencyPlan | None" = None,
     wall_budget_s: float = 0.0,
 ) -> SimResult:
     """Drive a two-level fleet: ``inter`` routing across ``n_pools``
@@ -201,7 +225,9 @@ def run_fleet(
     Under a ``faults`` plan with crashes, requeued work from a dead
     pool's workers re-routes deterministically to live siblings (across
     pool boundaries), so a dead pool drains instead of stranding its
-    queue (DESIGN.md §11)."""
+    queue (DESIGN.md §11).  Under a ``residency`` plan,
+    ``intra="residency"`` places requests on replicas already holding
+    their model's weights (DESIGN.md §13)."""
     return run_event_loop(
         requests,
         list(workers),
@@ -212,6 +238,7 @@ def run_fleet(
         engine=engine,
         horizon=horizon,
         faults=faults,
+        residency=residency,
         wall_budget_s=wall_budget_s,
     )
 

@@ -17,7 +17,8 @@ import numpy as np
 
 from ..core.distributions import BatchLatencyModel, EmpiricalDistribution
 from ..core.request import Request
-from .workload import AppWorkload
+from .residency import latency_scales, model_roster
+from .workload import AppWorkload, zipf_weights
 
 __all__ = [
     "TraceConfig",
@@ -45,6 +46,20 @@ class TraceConfig:
     # what the array engine's coalesced bulk paths feed on; the fleet-scale
     # ``cluster`` grids use it.
     tick_ms: float = 0.0
+    # Multi-model serving (DESIGN.md §13): requests target one of
+    # ``n_models`` zoo architectures with Zipf(``model_skew``) popularity.
+    # 1 (default) keeps the tier fully inert — no model ids are assigned,
+    # no extra rng stream is consumed, and existing traces stay
+    # bit-identical (the ``single-model-noop`` claim gates this).
+    n_models: int = 1
+    model_skew: float = 1.1
+
+
+# Dedicated entropy key for the model-assignment stream: model ids are
+# drawn from ``SeedSequence([seed, _MODEL_STREAM])``, never from the
+# arrival/alone-time generator, so turning multi-model on cannot perturb
+# the base trace (and n_models=1 consumes nothing at all).
+_MODEL_STREAM = 0x6D6F646C  # "modl"
 
 
 def azure_like_arrivals(
@@ -130,6 +145,7 @@ class RequestSet:
                 cost=r.cost,
                 extra_deadlines=r.extra_deadlines,
                 payload=r.payload,
+                model_id=r.model_id,
                 prompt_tokens=r.prompt_tokens,
                 out_tokens=r.out_tokens,
             )
@@ -161,6 +177,7 @@ class RequestSet:
                 r.true_time,
                 r.cost,
                 r.extra_deadlines,
+                r.model_id,
                 r.prompt_tokens,
                 r.out_tokens,
             )
@@ -226,7 +243,29 @@ def generate_requests(
         / latency_model.c1
         for a in apps
     }
+    if cfg.n_models > 1:
+        _assign_models(reqs, cfg)
     return RequestSet(requests=reqs, p99_alone=p99, app_history=history)
+
+
+def _assign_models(reqs: list[Request], cfg: TraceConfig) -> None:
+    """Stamp Zipf-popular model ids and per-model execution scaling.
+
+    Draws come from the dedicated ``_MODEL_STREAM`` generator, so the base
+    trace (apps, arrivals, alone times, SLOs) is byte-for-byte the one a
+    single-model run of the same seed sees; only ``model_id`` and the
+    per-model ``true_time`` multiplier differ.  SLOs stay anchored to the
+    *unscaled* alone-time p99 — slower models get proportionally tighter
+    deadlines, which is exactly the pressure the multi-model grid studies.
+    """
+    roster = model_roster(cfg.n_models)
+    scales = latency_scales(cfg.n_models)
+    probs = zipf_weights(cfg.n_models, cfg.model_skew)
+    mrng = np.random.default_rng(np.random.SeedSequence([cfg.seed, _MODEL_STREAM]))
+    which = mrng.choice(cfg.n_models, size=len(reqs), p=probs)
+    for r, m in zip(reqs, which.tolist()):
+        r.model_id = roster[m]
+        r.true_time *= scales[m]
 
 
 def generate_token_requests(
@@ -259,6 +298,11 @@ def generate_token_requests(
     is ``k / ((d0 + d1·k) · E[out])``; ``utilization`` scales that.
     """
     cfg = cfg or TraceConfig()
+    if cfg.n_models > 1:
+        raise ValueError(
+            "token-mode traces do not support multi-model serving "
+            "(decode batches cannot be residency-managed; DESIGN.md §13)"
+        )
     rng = np.random.default_rng(cfg.seed)
     n = cfg.n_requests
     which, lens = sample_alone_times(apps, rng, n)

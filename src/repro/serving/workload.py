@@ -24,9 +24,26 @@ __all__ = [
     "unequal_bimodal",
     "static",
     "lognormal_from_mean_p99",
+    "zipf_weights",
     "REAL_TASKS",
     "real_task",
 ]
+
+
+def zipf_weights(n_models: int, skew: float) -> np.ndarray:
+    """Zipf-skewed model popularity: ``w_i ∝ 1/(i+1)^skew``, normalized.
+
+    The multi-model tier's popularity prior (DESIGN.md §13): production
+    model fleets are heavily rank-skewed (Clockwork §2), so rank 0 of the
+    zoo roster soaks most of the traffic and the tail stays cold — the
+    regime where eviction policy actually matters.  ``skew=0`` is uniform.
+    """
+    if n_models < 1:
+        raise ValueError(f"n_models must be >= 1, got {n_models}")
+    if skew < 0.0:
+        raise ValueError(f"model_skew must be >= 0, got {skew}")
+    w = 1.0 / np.arange(1, n_models + 1, dtype=np.float64) ** skew
+    return w / w.sum()
 
 
 @dataclasses.dataclass(frozen=True)

@@ -1,0 +1,119 @@
+"""Tests for the flat-npz checkpoint store (``repro.checkpoint.store``):
+pytree round-trips, overwrite-in-place, step discovery, loud missing-key /
+shape-mismatch restores — and the store acting as the weights source
+behind a residency cache (DESIGN.md §13), where the set of restorable
+checkpoints and the cache's resident set must stay consistent."""
+
+import numpy as np
+import pytest
+
+from repro.checkpoint.store import latest_step, restore_checkpoint, save_checkpoint
+from repro.serving.residency import ModelProfile, ResidencyPlan
+
+
+def _tree(rng, scale=1.0):
+    return {
+        "embed": {"w": scale * rng.standard_normal((8, 4)).astype(np.float32)},
+        "blocks": [
+            {"w": scale * rng.standard_normal((4, 4)).astype(np.float32),
+             "b": np.zeros((4,), np.float32)}
+            for _ in range(2)
+        ],
+        "head": scale * rng.standard_normal((4, 3)).astype(np.float32),
+    }
+
+
+def _assert_trees_equal(a, b):
+    import jax
+
+    la = jax.tree_util.tree_leaves(a)
+    lb = jax.tree_util.tree_leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_round_trip(tmp_path):
+    tree = _tree(np.random.default_rng(0))
+    path = save_checkpoint(tmp_path, 3, tree)
+    assert path.name == "step_00000003.npz"
+    assert (tmp_path / "treedef.json").exists()
+    _assert_trees_equal(restore_checkpoint(tmp_path, 3, tree), tree)
+
+
+def test_overwrite_same_step_wins(tmp_path):
+    rng = np.random.default_rng(1)
+    old, new = _tree(rng), _tree(rng, scale=2.0)
+    save_checkpoint(tmp_path, 5, old)
+    save_checkpoint(tmp_path, 5, new)  # same step: silently replaces
+    _assert_trees_equal(restore_checkpoint(tmp_path, 5, old), new)
+
+
+def test_latest_step(tmp_path):
+    assert latest_step(tmp_path) is None  # empty (and nonexistent) dir
+    tree = _tree(np.random.default_rng(2))
+    for step in (1, 12, 7):
+        save_checkpoint(tmp_path, step, tree)
+    assert latest_step(tmp_path) == 12
+    # stray files that look nothing like checkpoints are ignored
+    (tmp_path / "step_notanumber.npz").write_bytes(b"")
+    (tmp_path / "notes.txt").write_text("hi")
+    assert latest_step(tmp_path) == 12
+
+
+def test_restore_missing_step_and_missing_key(tmp_path):
+    tree = _tree(np.random.default_rng(3))
+    save_checkpoint(tmp_path, 1, tree)
+    with pytest.raises(FileNotFoundError):
+        restore_checkpoint(tmp_path, 2, tree)
+    # a `like` tree with a leaf the checkpoint never saved fails loudly
+    wider = dict(tree)
+    wider["extra"] = np.zeros((2,), np.float32)
+    with pytest.raises(KeyError):
+        restore_checkpoint(tmp_path, 1, wider)
+
+
+def test_restore_shape_mismatch(tmp_path):
+    tree = _tree(np.random.default_rng(4))
+    save_checkpoint(tmp_path, 1, tree)
+    skewed = dict(tree)
+    skewed["head"] = np.zeros((4, 5), np.float32)
+    with pytest.raises(ValueError, match="shape mismatch"):
+        restore_checkpoint(tmp_path, 1, skewed)
+
+
+def test_store_backs_a_residency_cache(tmp_path):
+    """The integration the multi-model tier models: per-model checkpoint
+    dirs are the load source, the ResidencyState tracks what's on-device.
+    Every model the cache reports resident must be restorable, and the
+    cost-aware policy keeps the expensive-to-reload hot model resident."""
+    rng = np.random.default_rng(5)
+    models = {"hot_big": 3.0, "cold_small": 1.0, "third": 1.0}
+    trees = {}
+    for name in models:
+        trees[name] = _tree(rng, scale=rng.uniform(0.5, 2.0))
+        save_checkpoint(tmp_path / name, 0, trees[name])
+    # load_ms mirrors checkpoint size: hot_big is the expensive reload
+    plan = ResidencyPlan(
+        worker_mem=4.0,
+        profiles=tuple(
+            ModelProfile(model_id=m, nbytes=nb, load_ms=10.0 * nb)
+            for m, nb in models.items()
+        ),
+        policy="cost_aware",
+    )
+    state = plan.start(1)
+    for t in range(4):  # hot_big dominates demand
+        state.acquire(0, "hot_big", float(t))
+    state.acquire(0, "cold_small", 4.0)
+    state.acquire(0, "third", 5.0)  # over budget: cold_small is the victim
+    assert state.resident(0, "hot_big") and state.resident(0, "third")
+    assert not state.resident(0, "cold_small")
+    # the resident set is exactly the loadable, restorable checkpoints
+    for name in models:
+        if state.resident(0, name):
+            assert latest_step(tmp_path / name) == 0
+            _assert_trees_equal(
+                restore_checkpoint(tmp_path / name, 0, trees[name]),
+                trees[name],
+            )

@@ -1,0 +1,430 @@
+"""Tests for the multi-model serving tier (``repro.serving.residency``,
+DESIGN.md §13): plan/profile validation, LRU vs cost-aware eviction
+semantics, the Zipf model-assignment stream, the shared-queue multi-model
+scheduler, engine bit-identity under an active ResidencyPlan, the
+residency dispatch policy, and the loud seams at every unsupported
+feature crossing (faults, decode, baselines, engine substrate)."""
+
+import pytest
+
+from repro.core import (
+    BatchLatencyModel,
+    ModelExecutor,
+    MultiModelOrlojScheduler,
+    Worker,
+    run_event_loop,
+)
+from repro.core.request import Request
+from repro.serving import FaultPlan, ResidencyPlan
+from repro.serving.cluster import run_fleet
+from repro.serving.residency import (
+    DEFAULT_ROSTER,
+    EVICT_MS,
+    LOAD_FIXED_MS,
+    PCIE_BYTES_PER_MS,
+    ModelProfile,
+    latency_scales,
+    model_roster,
+    zoo_profile,
+)
+from repro.serving.trace import TraceConfig, generate_requests, generate_token_requests
+from repro.serving.workload import bimodal, zipf_weights
+
+LM = BatchLatencyModel(c0=25.0, c1=1.0)
+
+_COUNT_FIELDS = (
+    "n_total",
+    "n_finished_ok",
+    "n_finished_late",
+    "n_dropped",
+    "n_unserved",
+    "n_batches",
+    "n_model_loads",
+    "n_model_evicts",
+)
+
+
+def _tiny_plan(worker_mem=2.0, policy="lru", load=(10.0, 10.0, 10.0)):
+    """Synthetic 1-byte models A/B/C so eviction order is the only variable."""
+    profiles = tuple(
+        ModelProfile(model_id=m, nbytes=1.0, load_ms=ld)
+        for m, ld in zip("ABC", load)
+    )
+    return ResidencyPlan(worker_mem=worker_mem, profiles=profiles, policy=policy)
+
+
+def _mm_trace(n_models=2, util=1.2, n=300, seed=11, slo=2.0):
+    return generate_requests(
+        bimodal(1.0), LM, slo_scale=slo,
+        cfg=TraceConfig(n_requests=n, seed=seed, utilization=util,
+                        n_models=n_models),
+    )
+
+
+def _mm_workers(rs, n_models, k=1):
+    scales = latency_scales(n_models)
+    base = rs.initial_dists()
+    dists = {
+        m: {a: d.affine(s, 0.0) for a, d in base.items()}
+        for m, s in zip(model_roster(n_models), scales)
+    }
+    return [
+        Worker(MultiModelOrlojScheduler(LM, dists), ModelExecutor(LM))
+        for _ in range(k)
+    ]
+
+
+# ------------------------------------------------------------ roster / zoo
+def test_model_roster_and_scales():
+    assert model_roster(1) == ("olmo_1b",)
+    assert model_roster(4) == DEFAULT_ROSTER[:4]
+    assert latency_scales(4) == (1.0, 1.25, 1.5, 1.75)
+    with pytest.raises(ValueError):
+        model_roster(0)
+    with pytest.raises(ValueError):
+        model_roster(len(DEFAULT_ROSTER) + 1)
+
+
+def test_zipf_weights_shape():
+    w = zipf_weights(4, 1.1)
+    assert w.shape == (4,)
+    assert w.sum() == pytest.approx(1.0)
+    assert all(a > b for a, b in zip(w, w[1:]))  # rank 0 most popular
+    # higher skew concentrates more mass on the head
+    assert zipf_weights(4, 2.0)[0] > w[0]
+
+
+def test_zoo_profile_matches_config():
+    from repro.configs import get_config
+
+    prof = zoo_profile("olmo_1b")
+    nbytes = 2 * get_config("olmo_1b").n_params_estimate  # bf16
+    assert prof.nbytes == float(nbytes)
+    assert prof.load_ms == pytest.approx(
+        nbytes / PCIE_BYTES_PER_MS + LOAD_FIXED_MS
+    )
+    assert prof.evict_ms == EVICT_MS
+    with pytest.raises(ValueError):
+        zoo_profile("not_a_model")
+
+
+# ------------------------------------------------------- plan validation
+def test_profile_validation():
+    with pytest.raises(ValueError):
+        ModelProfile(model_id="x", nbytes=0.0, load_ms=1.0)
+    with pytest.raises(ValueError):
+        ModelProfile(model_id="x", nbytes=1.0, load_ms=-1.0)
+
+
+def test_plan_validation():
+    with pytest.raises(ValueError, match="eviction policy"):
+        _tiny_plan(policy="mru")
+    with pytest.raises(ValueError, match="worker_mem"):
+        _tiny_plan(worker_mem=0.0)
+    with pytest.raises(ValueError, match="at least one model"):
+        ResidencyPlan(worker_mem=1.0, profiles=())
+    dup = ModelProfile(model_id="A", nbytes=1.0, load_ms=1.0)
+    with pytest.raises(ValueError, match="duplicate"):
+        ResidencyPlan(worker_mem=1.0, profiles=(dup, dup))
+    # a model larger than the budget can never be served — fail at build
+    big = ModelProfile(model_id="big", nbytes=4.0, load_ms=1.0)
+    with pytest.raises(ValueError, match="can never fit"):
+        ResidencyPlan(worker_mem=2.0, profiles=(big,))
+
+
+def test_plan_dict_round_trip():
+    plan = ResidencyPlan.from_zoo(model_roster(3), worker_mem=2**32,
+                                  policy="cost_aware")
+    assert ResidencyPlan.from_dict(plan.to_dict()) == plan
+    # unknown keys (future knobs in old artifacts) are ignored, not fatal
+    d = plan.to_dict()
+    d["not_a_knob"] = 7
+    assert ResidencyPlan.from_dict(d) == plan
+
+
+# ------------------------------------------------------ acquire semantics
+def test_acquire_hit_miss_and_lru_order():
+    state = _tiny_plan(worker_mem=2.0).start(1)
+    assert state.acquire(0, "A", 0.0) == pytest.approx(10.0)  # cold load
+    assert state.acquire(0, "B", 1.0) == pytest.approx(10.0)
+    assert state.acquire(0, "A", 2.0) == 0.0  # hit, and A becomes MRU
+    # cache full: C evicts the LRU model, which is now B (A was re-touched)
+    assert state.acquire(0, "C", 3.0) == pytest.approx(EVICT_MS + 10.0)
+    assert state.resident(0, "A") and state.resident(0, "C")
+    assert not state.resident(0, "B")
+    assert (state.n_loads, state.n_evicts, state.n_hits) == (3, 1, 1)
+    assert state.load_ms_total == pytest.approx(30.0 + EVICT_MS)
+
+
+def test_acquire_evicts_until_model_fits():
+    # capacity 3, three 1-byte residents, then a 3-byte arrival: every
+    # resident must go, and the stall charges each eviction plus the load
+    profiles = tuple(
+        ModelProfile(model_id=m, nbytes=1.0, load_ms=5.0) for m in "ABC"
+    ) + (ModelProfile(model_id="D", nbytes=3.0, load_ms=20.0),)
+    state = ResidencyPlan(worker_mem=3.0, profiles=profiles).start(1)
+    for t, m in enumerate("ABC"):
+        state.acquire(0, m, float(t))
+    stall = state.acquire(0, "D", 3.0)
+    assert stall == pytest.approx(3 * EVICT_MS + 20.0)
+    assert state.n_evicts == 3
+    assert [m for m in "ABC" if state.resident(0, m)] == []
+
+
+def test_cost_aware_evicts_smallest_reload_risk():
+    # A is expensive to reload and hot; B cheap and cold.  LRU would evict
+    # A (least recently touched after the B touch below); cost_aware keeps
+    # it and sacrifices B.
+    for policy, victim in (("lru", "A"), ("cost_aware", "B")):
+        state = _tiny_plan(policy=policy, load=(50.0, 1.0, 10.0)).start(1)
+        state.acquire(0, "A", 0.0)
+        for t in range(1, 5):  # demand signal: A is hot
+            state.acquire(0, "A", float(t))
+        state.acquire(0, "B", 5.0)  # B now most recent
+        state.acquire(0, "C", 6.0)  # full: someone must go
+        assert not state.resident(0, victim), policy
+        assert state.resident(0, "C")
+
+
+def test_acquire_is_per_worker_and_deterministic():
+    plan = _tiny_plan(worker_mem=1.0)
+    state = plan.start(2)
+    state.acquire(0, "A", 0.0)
+    assert state.resident(0, "A") and not state.resident(1, "A")
+    state.acquire(1, "B", 0.0)
+    assert state.n_loads == 2 and state.n_evicts == 0  # separate budgets
+    # identical call sequences on fresh states replay identically
+    seq = [(0, "A"), (1, "B"), (0, "B"), (1, "A"), (0, "A")]
+    runs = []
+    for _ in range(2):
+        s = plan.start(2)
+        runs.append([s.acquire(w, m, float(i)) for i, (w, m) in enumerate(seq)])
+    assert runs[0] == runs[1]
+
+
+def test_acquire_unknown_model_and_bad_worker_count():
+    plan = _tiny_plan()
+    with pytest.raises(ValueError, match="no profile"):
+        plan.start(1).acquire(0, "Z", 0.0)
+    with pytest.raises(ValueError, match="n_workers"):
+        plan.start(0)
+
+
+# -------------------------------------------------------- trace assignment
+def test_assign_models_preserves_base_trace():
+    base = _mm_trace(n_models=1, seed=11)
+    mm = _mm_trace(n_models=4, seed=11)
+    scales = dict(zip(model_roster(4), latency_scales(4)))
+    assert all(r.model_id is None for r in base.requests)
+    for b, m in zip(base.requests, mm.requests):
+        assert m.model_id in scales
+        # arrivals, SLOs, app ids are byte-identical; only the per-model
+        # execution multiplier touches true_time
+        assert (b.app_id, b.release, b.slo) == (m.app_id, m.release, m.slo)
+        assert m.true_time == pytest.approx(b.true_time * scales[m.model_id])
+    # rank 0 is the Zipf head: strictly the most popular assignment
+    counts = {m: 0 for m in scales}
+    for r in mm.requests:
+        counts[r.model_id] += 1
+    head = model_roster(4)[0]
+    assert all(counts[head] > c for m, c in counts.items() if m != head)
+
+
+def test_assign_models_changes_fingerprint_only_when_on():
+    base, mm = _mm_trace(n_models=1), _mm_trace(n_models=4)
+    inert = generate_requests(
+        bimodal(1.0), LM, slo_scale=2.0,
+        cfg=TraceConfig(n_requests=300, seed=11, utilization=1.2),
+    )
+    assert base.fingerprint() == inert.fingerprint()
+    assert mm.fingerprint() != base.fingerprint()
+    # skew is part of the stream: a different skew reassigns models
+    other = generate_requests(
+        bimodal(1.0), LM, slo_scale=2.0,
+        cfg=TraceConfig(n_requests=300, seed=11, utilization=1.2,
+                        n_models=4, model_skew=3.0),
+    )
+    assert other.fingerprint() != mm.fingerprint()
+
+
+def test_token_traces_reject_multi_model():
+    with pytest.raises(ValueError, match="multi-model"):
+        generate_token_requests(
+            bimodal(1.0), d0=5.0, d1=0.5, prefill_per_token=0.02,
+            ttft_slo_ms=200.0, tpot_slo_ms=20.0,
+            cfg=TraceConfig(n_requests=10, n_models=2),
+        )
+
+
+# --------------------------------------------------- multi-model scheduler
+def test_multi_model_scheduler_routes_and_stamps():
+    rs = _mm_trace(n_models=2, n=100)
+    sched = _mm_workers(rs, 2)[0].scheduler
+    assert sched.n_pending == 0
+    sched.on_arrivals(rs.requests, 0.0)
+    assert sched.n_pending == len(rs.requests)
+    seen = set()
+    now = 10_000.0  # far past every deadline milestone: everything is ripe
+    batch, _ = sched.next_batch(now)
+    while batch is not None:
+        assert batch.model in model_roster(2)
+        assert all(r.model_id == batch.model for r in batch.requests)
+        seen.add(batch.model)
+        sched.on_batch_done(batch, now, [r.true_time for r in batch.requests])
+        now += 50.0
+        batch, _ = sched.next_batch(now)
+    assert seen == set(model_roster(2))
+    assert sched.n_pending == 0
+
+
+def test_multi_model_scheduler_loud_seams():
+    rs = _mm_trace(n_models=2, n=10)
+    sched = _mm_workers(rs, 2)[0].scheduler
+    with pytest.raises(ValueError, match="at least one model"):
+        MultiModelOrlojScheduler(LM, {})
+    stray = Request(app_id="short", release=0.0, slo=100.0, true_time=1.0,
+                    model_id="not_in_roster")
+    with pytest.raises(ValueError, match="unknown model"):
+        sched.on_arrival(stray, 0.0)
+    unset = Request(app_id="short", release=0.0, slo=100.0, true_time=1.0)
+    with pytest.raises(ValueError, match="unknown model"):
+        sched.on_arrivals([unset], 0.0)
+
+
+# ------------------------------------------------- event-loop integration
+def test_engines_bit_identical_under_residency():
+    rs = _mm_trace(n_models=2, n=300, util=1.6)
+    plan = ResidencyPlan.from_zoo(model_roster(2),
+                                  worker_mem=float(3 * 2**30))
+    results = {}
+    for engine in ("scalar", "array"):
+        results[engine] = run_event_loop(
+            rs.fresh(), _mm_workers(rs, 2, k=2), seed=0,
+            policy="residency", engine=engine, residency=plan,
+        )
+    sc, ar = results["scalar"], results["array"]
+    for f in _COUNT_FIELDS:
+        assert getattr(sc, f) == getattr(ar, f), f
+    assert sc.model_load_ms == ar.model_load_ms
+    assert sc.latencies.tobytes() == ar.latencies.tobytes()
+    assert sc.n_model_loads > 0  # the plan was actually exercised
+
+
+def test_residency_policy_builds_affinity():
+    # two workers, two models, budget fits one model per worker: the
+    # residency policy settles into one-model-per-worker and stops
+    # loading; round_robin keeps alternating and churns the caches.
+    rs = _mm_trace(n_models=2, n=300, util=1.6)
+    plan = ResidencyPlan.from_zoo(model_roster(2),
+                                  worker_mem=float(3 * 2**30))
+    loads = {}
+    for policy in ("residency", "round_robin"):
+        res = run_event_loop(
+            rs.fresh(), _mm_workers(rs, 2, k=2), seed=0,
+            policy=policy, engine="array", residency=plan,
+        )
+        loads[policy] = res.n_model_loads
+    assert loads["residency"] <= 4  # ~one cold start per (worker, model)
+    assert loads["round_robin"] > 5 * loads["residency"]
+
+
+def test_fleet_intra_residency():
+    rs = _mm_trace(n_models=2, n=300, util=1.6)
+    plan = ResidencyPlan.from_zoo(model_roster(2),
+                                  worker_mem=float(3 * 2**30))
+    loads = {}
+    for intra in ("residency", "round_robin"):
+        res = run_fleet(
+            rs.fresh(), _mm_workers(rs, 2, k=4), n_pools=2,
+            inter="round_robin", intra=intra, seed=0, residency=plan,
+        )
+        loads[intra] = res.n_model_loads
+    assert loads["residency"] < loads["round_robin"]
+
+
+def test_residency_stall_charges_virtual_time():
+    # same trace with and without the plan: the managed run's load stalls
+    # must show up in the clock (makespan) and the load counters, and
+    # disappear again when every model fits resident forever.
+    rs = _mm_trace(n_models=2, n=200, util=1.6)
+    free = run_event_loop(rs.fresh(), _mm_workers(rs, 2), seed=0)
+    tight = run_event_loop(
+        rs.fresh(), _mm_workers(rs, 2), seed=0,
+        residency=ResidencyPlan.from_zoo(model_roster(2),
+                                         worker_mem=float(3 * 2**30)),
+    )
+    roomy = run_event_loop(
+        rs.fresh(), _mm_workers(rs, 2), seed=0,
+        residency=ResidencyPlan.from_zoo(model_roster(2),
+                                         worker_mem=float(64 * 2**30)),
+    )
+    assert free.n_model_loads == 0 and free.model_load_ms == 0.0
+    assert tight.n_model_evicts > 0
+    assert tight.model_load_ms > roomy.model_load_ms > 0.0
+    assert roomy.n_model_loads == 2 and roomy.n_model_evicts == 0
+    # cold-start churn costs SLO attainment — the §13 claim in miniature
+    assert tight.n_finished_ok < roomy.n_finished_ok
+
+
+# ------------------------------------------------------------- loud seams
+def test_residency_rejects_active_fault_plan():
+    rs = _mm_trace(n_models=2, n=20)
+    plan = ResidencyPlan.from_zoo(model_roster(2), worker_mem=float(3 * 2**30))
+    with pytest.raises(ValueError, match="fault"):
+        run_event_loop(
+            rs.fresh(), _mm_workers(rs, 2), seed=0,
+            residency=plan, faults=FaultPlan(mttf_ms=1000.0),
+        )
+
+
+def test_runner_seams_fail_loudly():
+    from repro.eval.runner import run_spec
+    from repro.eval.spec import ExperimentSpec
+
+    mm = dict(workload="bimodal", slo_scale=2.0, n_requests=20,
+              n_models=2, worker_mem=float(3 * 2**30))
+    with pytest.raises(ValueError, match="system='orloj' only"):
+        run_spec(ExperimentSpec(**mm, system="nexus"))
+    with pytest.raises(ValueError, match="sim substrate only"):
+        run_spec(ExperimentSpec(**mm, substrate="engine"))
+    with pytest.raises(ValueError, match="worker_mem"):
+        run_spec(ExperimentSpec(**{**mm, "worker_mem": 0.0}))
+    with pytest.raises(ValueError, match="multi-model"):
+        run_spec(ExperimentSpec(workload="tokens", slo_scale=2.0,
+                                n_requests=20, system="token_fcfs",
+                                n_models=2))
+
+
+def test_decode_cells_reject_fault_plans():
+    # DESIGN.md §12 seam, pinned here alongside its §13 sibling: the
+    # token-level decode path has no fault story either.
+    from repro.eval.runner import run_spec
+    from repro.eval.spec import ExperimentSpec
+
+    with pytest.raises(ValueError, match="fault"):
+        run_spec(ExperimentSpec(workload="tokens", slo_scale=2.0,
+                                n_requests=20, system="token_fcfs",
+                                faults={"mttf_ms": 1000.0}))
+
+
+def test_single_model_run_identical_with_and_without_tier():
+    """The inert-knob guarantee behind the single-model-noop claim, at the
+    event-loop level: an n_models=1 replay takes zero residency branches."""
+    rs = _mm_trace(n_models=1, n=200)
+
+    def once():
+        from repro.core import OrlojScheduler
+
+        workers = [
+            Worker(OrlojScheduler(LM, initial_dists=rs.initial_dists()),
+                   ModelExecutor(LM))
+        ]
+        return run_event_loop(rs.fresh(), workers, seed=0,
+                              residency=None)
+
+    a, b = once(), once()
+    assert a.n_model_loads == a.n_model_evicts == 0
+    assert a.model_load_ms == 0.0
+    for f in _COUNT_FIELDS:
+        assert getattr(a, f) == getattr(b, f)
+    assert a.latencies.tobytes() == b.latencies.tobytes()
